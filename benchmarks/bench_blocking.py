@@ -1,0 +1,42 @@
+"""Paper Table 1: throughput under V ∈ {1,2,3} with zero-padding ratios —
+the vectorized-blocking/data-locality trade-off.
+
+Primary numbers are TPU cost-model throughput (the kernel's deployment
+target: V=2 wins by halving B-row gather traffic when PR_2 is low).  The
+measured CPU-engine time is reported alongside; on CPU the scatter-add
+dominates and hides the gather saving — a documented backend artifact
+(DESIGN.md §7)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.engine import engine_spmm
+from repro.core.autotune import time_fn
+from repro.core.pcsr import SpMMConfig, build_pcsr
+from .common import bench_corpus, emit, gflops, subset
+
+DIM = 32
+# clone graphs = coPapers analogues (V=2 wins, low PR_2);
+# shuffled graphs = sx-* analogues (V=1 wins, padding dominates)
+GRAPHS = ["clones4000", "clones16000", "rmat12_sh", "er16000_sh"]
+
+
+def run():
+    gs = {g.name: g for g in bench_corpus()}
+    rng = np.random.default_rng(0)
+    for name in GRAPHS:
+        g = gs[name]
+        cm = CostModel(g.csr)
+        B = jnp.asarray(rng.standard_normal((g.csr.n_cols, DIM)),
+                        jnp.float32)
+        for V in (1, 2, 3):
+            cfg = SpMMConfig(V=V, S=False, F=1, W=max(1, 16 // V))
+            p = build_pcsr(g.csr.indptr, g.csr.indices, g.csr.data,
+                           g.csr.n_rows, g.csr.n_cols, cfg)
+            t_model = cm.time(DIM, cfg)
+            t_cpu = time_fn(engine_spmm, p, B, reps=3)
+            emit(f"table1/{name}/V{V}", t_model * 1e6,
+                 f"tpu_gflops={gflops(g.csr, DIM, t_model):.1f};"
+                 f"pr={p.padding_ratio:.3f};cpu_us={t_cpu*1e6:.0f}")

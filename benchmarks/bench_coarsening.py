@@ -1,0 +1,36 @@
+"""Paper Table 2: distribution of the optimal coarsening factor F and the
+MAC-job gap.  TPU adaptation: ω = 128 lanes (not 32 threads), so F matters
+for dim > 128; gap_F = lane-padding when dim mod F·128 ≠ 0.  Optimal F per
+graph from the TPU cost model (F's per-step overhead isn't visible to CPU
+wall-clock — DESIGN.md §7)."""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core.cost_model import CostModel
+from repro.core.pcsr import config_space
+from .common import bench_corpus, emit
+
+DIMS = (128, 160, 256, 384)
+OMEGA = 128
+
+
+def gap(dim, F):
+    tn = min(dim, F * OMEGA)
+    tr = dim % (F * OMEGA)
+    return tn - tr if tr else 0
+
+
+def run():
+    gs = bench_corpus()
+    cms = {g.name: CostModel(g.csr) for g in gs}
+    for dim in DIMS:
+        space = config_space(dim, max_f=4)
+        fs = sorted({c.F for c in space})
+        counts = Counter()
+        for g in gs:
+            best, _ = cms[g.name].best(dim, space)
+            counts[best.F] += 1
+        for F in fs:
+            emit(f"table2/dim{dim}/F{F}", 0.0,
+                 f"pct={100.0*counts[F]/len(gs):.1f};gap={gap(dim, F)}")

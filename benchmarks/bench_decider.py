@@ -1,0 +1,28 @@
+"""Paper Table 5: SpMM-decider prediction quality — normalized performance
+of predicted vs oracle configurations, with random configuration as the
+baseline.  80/20 split by graph; labels from the TPU cost model over the
+full ⟨W,F,V,S⟩ space."""
+from __future__ import annotations
+
+import os
+import pickle
+
+from repro.apps.decider_train import DIMS, build_dataset, train_eval
+from .common import bench_corpus, emit
+
+DECIDER_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "experiments", "decider.pkl")
+
+
+def run(save=True):
+    ds = build_dataset(bench_corpus(), dims=DIMS)
+    ev = train_eval(ds)
+    for dim, (pred, rnd) in ev.per_dim.items():
+        emit(f"table5/dim{dim}", 0.0,
+             f"pred={100*pred:.2f}%;rnd={100*rnd:.2f}%")
+    emit("table5/overall", 0.0,
+         f"pred={100*ev.overall_pred:.2f}%;rnd={100*ev.overall_rnd:.2f}%")
+    if save:
+        os.makedirs(os.path.dirname(DECIDER_PATH), exist_ok=True)
+        ev.decider.save(DECIDER_PATH)
+    return ev.decider

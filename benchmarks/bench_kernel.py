@@ -1,0 +1,28 @@
+"""Pallas-kernel roofline table: per-config cost-model terms for the
+ParamSpMM TPU kernel on representative graphs (the kernel's §Roofline
+contribution — the LM-cell roofline lives in launch/dryrun)."""
+from __future__ import annotations
+
+from repro.core.cost_model import CostModel
+from repro.core.pcsr import config_space
+from .common import bench_corpus, emit
+
+DIM = 128
+GRAPHS = ["sbm32x256", "rmat13", "er16000", "grid128"]
+
+
+def run():
+    gs = {g.name: g for g in bench_corpus()}
+    for name in GRAPHS:
+        if name not in gs:
+            continue
+        cm = CostModel(gs[name].csr)
+        best, _ = cm.best(DIM, config_space(DIM))
+        cb = cm.cost(DIM, best)
+        bound = "mem" if cb.t_mem > max(cb.t_compute, cb.t_overhead) else \
+            ("compute" if cb.t_compute > cb.t_overhead else "issue")
+        emit(f"kernel/{name}/best", cb.total * 1e6,
+             f"cfg={best.astuple()};t_mem={cb.t_mem*1e6:.1f}us;"
+             f"t_comp={cb.t_compute*1e6:.1f}us;"
+             f"t_ovh={cb.t_overhead*1e6:.1f}us;bound={bound};"
+             f"steps={cb.steps}")

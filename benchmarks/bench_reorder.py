@@ -1,0 +1,49 @@
+"""Paper Table 6: graph-reordering ablation — cuSPARSE / ParamSpMM with
+and without (Rabbit-style) reordering, speedups normalized to
+cuSPARSE-without-reordering.  Reordering lowers PR_2 / bandwidth, which
+ParamSpMM's V=2 blocking exploits better than the static vendor kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import oracle_search, time_fn
+from repro.core.baselines import make_cusparse_analog
+from repro.core.engine import engine_spmm
+from repro.core.features import extract_features
+from repro.core.pcsr import build_pcsr
+from repro.core.reorder import apply_reorder, rabbit_reorder
+from .common import bench_corpus, emit, subset
+
+DIMS = (32, 64, 128)
+
+
+def run():
+    """TPU cost model primary (see bench_speedups docstring); the vendor
+    static config is priced on the same model so the four quantities are
+    comparable the way the paper's Table 6 is."""
+    from repro.core.cost_model import CostModel
+    from repro.core.pcsr import config_space
+    from .bench_speedups import CUSPARSE_CFG
+
+    names = ["clones16000_sh", "clones4000_sh", "rmat13_sh", "sbm32x256_sh"]
+    gs = {g.name: g for g in bench_corpus()}
+    for name in names:
+        if name not in gs:
+            continue
+        wor = gs[name].csr
+        perm = rabbit_reorder(wor)
+        wr = apply_reorder(wor, perm)
+        pr_wor = extract_features(wor).as_dict()["pr_2"]
+        pr_wr = extract_features(wr).as_dict()["pr_2"]
+        cm_wor, cm_wr = CostModel(wor), CostModel(wr)
+        for dim in DIMS:
+            t_cus_wor = cm_wor.time(dim, CUSPARSE_CFG)
+            t_cus = cm_wr.time(dim, CUSPARSE_CFG)
+            t_par_wor = cm_wor.best(dim, config_space(dim))[1]
+            t_par = cm_wr.best(dim, config_space(dim))[1]
+            emit(f"table6/{name}/dim{dim}", t_par * 1e6,
+                 f"cusparse={t_cus_wor/t_cus:.2f}x;"
+                 f"paramspmm_wor={t_cus_wor/t_par_wor:.2f}x;"
+                 f"paramspmm={t_cus_wor/t_par:.2f}x;"
+                 f"pr2={pr_wor:.3f}->{pr_wr:.3f}")

@@ -1,0 +1,45 @@
+"""Shared benchmark infrastructure: cached corpus/features, timing, CSV."""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.autotune import throughput_gflops, time_fn
+from repro.core.features import extract_features
+from repro.data.graphs import corpus
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+@functools.lru_cache(maxsize=4)
+def bench_corpus(scale: str = "bench"):
+    return corpus(scale)
+
+
+def subset(graphs, max_nnz=300_000, k=12):
+    """Deterministic measurement subset (CPU wall-clock budget)."""
+    ok = [g for g in graphs if g.csr.nnz <= max_nnz]
+    # spread across families
+    fams: dict = {}
+    for g in ok:
+        fams.setdefault(g.family, []).append(g)
+    out, i = [], 0
+    while len(out) < min(k, len(ok)):
+        for f in sorted(fams):
+            if i < len(fams[f]) and len(out) < k:
+                out.append(fams[f][i])
+        i += 1
+    return out
+
+
+def gflops(csr, dim, seconds):
+    return throughput_gflops(csr, dim, seconds)

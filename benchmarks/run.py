@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+  table1 — blocking (V) vs data locality          [paper Table 1]
+  fig1   — workload balancing (S) vs CV           [paper Fig. 1]
+  table2 — optimal-F distribution + MAC gap       [paper Table 2]
+  table5 — decider accuracy                       [paper Table 5]
+  table4 — speedups vs baseline families          [paper Table 4/Fig. 4]
+  table6 — reordering ablation                    [paper Table 6]
+  fig5   — GCN/GIN end-to-end training            [paper Fig. 5]
+  kernel — Pallas-kernel roofline terms           [§Roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_balancing, bench_blocking,
+                            bench_coarsening, bench_decider,
+                            bench_gnn_train, bench_kernel, bench_reorder,
+                            bench_speedups)
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    jobs = {
+        "table1": bench_blocking.run,
+        "fig1": bench_balancing.run,
+        "table2": bench_coarsening.run,
+        "table5": bench_decider.run,     # also trains + saves the decider
+        "table4": None,                  # needs the trained decider
+        "table6": bench_reorder.run,
+        "fig5": bench_gnn_train.run,
+        "kernel": bench_kernel.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(jobs)
+    decider = None
+    for key, fn in jobs.items():
+        if key not in only:
+            continue
+        t0 = time.time()
+        if key == "table5":
+            decider = fn()
+        elif key == "table4":
+            bench_speedups.run(decider)
+        else:
+            fn()
+        emit(f"{key}/__elapsed", (time.time() - t0) * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""End-to-end driver (paper §6.5): train GCN and GIN on a community
+node-classification task with ParamSpMM aggregation, and compare per-step
+time against the vendor-library (BCOO) baseline.
+
+    PYTHONPATH=src python examples/gnn_training.py
+"""
+from repro.apps.gnn import train_gnn
+from repro.data.tasks import community_task
+
+
+def main():
+    task = community_task(n_blocks=10, block_size=200, feat_dim=16,
+                          p_in=0.1, noise=1.5, seed=0)
+    print(f"graph: n={task.csr.n_rows} nnz={task.csr.nnz} "
+          f"classes={task.n_classes}")
+    for model in ("gcn", "gin"):
+        ours = train_gnn(task, model=model, hidden=64, n_layers=5,
+                         steps=60, spmm_mode="paramspmm")
+        base = train_gnn(task, model=model, hidden=64, n_layers=5,
+                         steps=60, spmm_mode="cusparse")
+        print(f"{model.upper()}: ParamSpMM cfg={ours.config.astuple()} "
+              f"loss {ours.losses[0]:.3f}→{ours.losses[-1]:.3f} "
+              f"val_acc={ours.val_acc:.3f} "
+              f"{ours.seconds_per_step*1e3:.1f} ms/step "
+              f"(vendor baseline {base.seconds_per_step*1e3:.1f} ms/step, "
+              f"acc {base.val_acc:.3f})")
+
+
+if __name__ == "__main__":
+    main()

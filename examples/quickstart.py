@@ -1,0 +1,46 @@
+"""Quickstart: the ParamSpMM three-phase workflow (paper Fig. 2) on one
+graph — features → config (cost-model oracle) → PCSR → SpMM, validated
+against the oracle, on both the JAX engine and the Pallas TPU kernel
+(interpret mode on CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.features import extract_features
+from repro.data.graphs import clones, rmat
+from repro.kernels.paramspmm import paramspmm, spmm_ref
+from repro.pipeline import ParamSpMM
+
+DIM = 64
+
+
+def main():
+    for name, graph in [("co-citation (local)", clones(4000, 10, seed=0)),
+                        ("power-law (skewed)", rmat(11, 8, seed=0))]:
+        feats = extract_features(graph).as_dict()
+        sp = ParamSpMM(graph, DIM, reorder=True)
+        print(f"\n=== {name}: n={graph.n_rows} nnz={graph.nnz} "
+              f"cv={feats['cv']:.2f} pr2={feats['pr_2']:.3f}")
+        print(f"  chosen ⟨W,F,V,S⟩ = {sp.config.astuple()}  "
+              f"(PR_V={sp.op.pcsr.padding_ratio:.3f} "
+              f"SR={sp.op.pcsr.split_ratio:.2f})")
+
+        rng = np.random.default_rng(0)
+        B = jnp.asarray(rng.standard_normal((graph.n_cols, DIM)),
+                        jnp.float32)
+        # note: pipeline reordered the graph; feed B in reordered space
+        inv = np.argsort(sp.perm)
+        Bp = B[jnp.asarray(inv)]
+        out_engine = np.asarray(sp(Bp))
+
+        out_kernel = np.asarray(paramspmm(sp.op.pcsr, Bp))
+        ref = np.asarray(spmm_ref(sp.csr.indptr, sp.csr.indices,
+                                  sp.csr.data, Bp, sp.csr.n_rows))
+        print(f"  engine  max|err| = {np.abs(out_engine - ref).max():.2e}")
+        print(f"  pallas  max|err| = {np.abs(out_kernel - ref).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

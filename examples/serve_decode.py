@@ -1,0 +1,11 @@
+"""Serving example: batched prefill-free decode with KV/SSM caches on the
+hybrid (hymba) architecture — exercises ring-buffer SWA caches, global
+caches, and SSM state end to end.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "hymba-1.5b", "--reduced", "--batch", "4",
+          "--prompt-len", "12", "--gen", "24", "--temperature", "0.8"])

@@ -1,0 +1,95 @@
+"""SpMM-decider training harness (paper §5-6.3).
+
+Labels come from the oracle search over the ⟨W,F,V,S⟩ space: cost-model
+pricing at corpus scale (the TPU kernel is the deployment target — CPU
+wall-time can't see F), plus a measured-mode evaluation on a subset for
+validation.  Train/test split is BY GRAPH to avoid leakage (the paper's
+80/20 split of matrices).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.autotune import oracle_search
+from repro.core.cost_model import CostModel
+from repro.core.decider import RandomForest, SpMMDecider
+from repro.core.features import extract_features
+from repro.core.pcsr import SpMMConfig, config_space
+from repro.data.graphs import corpus
+
+DIMS = tuple(range(16, 257, 16))           # the paper's dim sweep
+
+
+@dataclass
+class DeciderDataset:
+    samples: list                          # (features, dim, best_cfg)
+    times: dict                            # (gname, dim) -> {cfg: time}
+    graph_names: list
+    by_graph: dict                         # gname -> [sample indices]
+
+
+def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
+                  verbose=False) -> DeciderDataset:
+    graphs = graphs if graphs is not None else corpus("bench")
+    samples, times, by_graph = [], {}, {}
+    for g in graphs:
+        t0 = time.time()
+        feats = extract_features(g.csr)
+        cm = CostModel(g.csr) if mode == "model" else None
+        for dim in dims:
+            res = oracle_search(g.csr, dim, mode=mode, cm=cm)
+            samples.append((feats, dim, res.best_config))
+            times[(g.name, dim)] = res.times
+            by_graph.setdefault(g.name, []).append(len(samples) - 1)
+        if verbose:
+            print(f"  {g.name}: {time.time()-t0:.1f}s")
+    return DeciderDataset(samples, times, [g.name for g in graphs],
+                          by_graph)
+
+
+@dataclass
+class DeciderEval:
+    per_dim: dict                          # dim -> (pred_norm, rnd_norm)
+    overall_pred: float
+    overall_rnd: float
+    decider: SpMMDecider
+
+
+def train_eval(ds: DeciderDataset, *, test_frac=0.2, seed=0,
+               n_estimators=60) -> DeciderEval:
+    rng = np.random.default_rng(seed)
+    names = list(ds.graph_names)
+    rng.shuffle(names)
+    n_test = max(1, int(len(names) * test_frac))
+    test_names = set(names[:n_test])
+    train_idx = [i for n in names[n_test:] for i in ds.by_graph[n]]
+    test_idx = [i for n in test_names for i in ds.by_graph[n]]
+
+    decider = SpMMDecider(
+        forest=RandomForest(n_estimators=n_estimators, seed=seed))
+    decider.fit([ds.samples[i] for i in train_idx])
+
+    per_dim: dict = {}
+    key_of = {}
+    for n in ds.graph_names:
+        for i in ds.by_graph[n]:
+            key_of[i] = n
+    for i in test_idx:
+        feats, dim, best = ds.samples[i]
+        tt = ds.times[(key_of[i], dim)]
+        t_best = tt[best]
+        pred = decider.predict(feats, dim)
+        t_pred = tt.get(pred, max(tt.values()))
+        rnd_cfg = list(tt)[int(rng.integers(len(tt)))]
+        e = per_dim.setdefault(dim, [[], []])
+        e[0].append(t_best / t_pred)       # normalized perf (throughput)
+        e[1].append(t_best / tt[rnd_cfg])
+    agg = {d: (float(np.mean(v[0])), float(np.mean(v[1])))
+           for d, v in sorted(per_dim.items())}
+    allp = [x for v in per_dim.values() for x in v[0]]
+    allr = [x for v in per_dim.values() for x in v[1]]
+    return DeciderEval(agg, float(np.mean(allp)), float(np.mean(allr)),
+                       decider)

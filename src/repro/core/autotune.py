@@ -1,0 +1,70 @@
+"""Oracle config search: exhaustive timing/pricing of the config space.
+
+Two modes:
+  * "model"    — analytical TPU cost model (corpus-scale label source);
+  * "measured" — wall-clock of the jit'd JAX engine on this host, with B
+    padded to the F-tile so the MAC-job gap is physically paid.  CPU time
+    is a proxy (no per-step DMA overhead), used to validate the model's
+    ranking on a subset (EXPERIMENTS.md records both).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost_model import CostModel
+from .engine import engine_spmm
+from .pcsr import SpMMConfig, build_pcsr, config_space
+from .sparse import CSRMatrix
+
+
+def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclass
+class OracleResult:
+    times: dict            # config -> seconds
+    best_config: SpMMConfig
+    best_time: float
+
+
+def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
+                  reps: int = 3, rng_seed: int = 0,
+                  cm: CostModel | None = None) -> OracleResult:
+    space = space or config_space(dim)
+    times = {}
+    if mode == "model":
+        cm = cm or CostModel(csr)
+        for cfg in space:
+            times[cfg] = cm.time(dim, cfg)
+    elif mode == "measured":
+        rng = np.random.default_rng(rng_seed)
+        for cfg in space:
+            dim_pad = -(-dim // cfg.dblk) * cfg.dblk
+            B = jnp.asarray(rng.standard_normal((csr.n_cols, dim_pad)),
+                            jnp.float32)
+            pcsr = build_pcsr(csr.indptr, csr.indices, csr.data,
+                              csr.n_rows, csr.n_cols, cfg)
+            times[cfg] = time_fn(engine_spmm, pcsr, B, reps=reps)
+    else:
+        raise ValueError(mode)
+    best = min(times, key=times.get)
+    return OracleResult(times, best, times[best])
+
+
+def throughput_gflops(csr: CSRMatrix, dim: int, seconds: float) -> float:
+    """Useful GFLOP/s (2·nnz·dim MACs), the paper's reporting unit."""
+    return 2.0 * csr.nnz * dim / seconds / 1e9

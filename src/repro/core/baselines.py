@@ -1,0 +1,72 @@
+"""SpMM baselines the paper compares against (§6.1), as faithful analogues
+on the JAX/TPU side (torch/CUDA originals don't exist here — DESIGN.md §7):
+
+  * cuSPARSE  → vendor sparse library path = ``jax.experimental.sparse``
+    BCOO matmul (the library-provided, input-agnostic kernel).
+  * GE-SpMM   → static CSR row-wise kernel: gather + segment-sum
+    (coarsening fixed by the compiler, no blocking/balancing).
+  * GNNAdvisor → heuristic runtime: always-on balancing, no blocking,
+    dim-scaled coarsening (their §related-work behaviour the paper calls
+    out: "simply increase F with dim").
+  * DA-SpMM   → ML-adaptive but over a reduced space (no blocking, no
+    coarsening — the paper notes their space overlooks V and F).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import engine_spmm
+from .pcsr import SpMMConfig, build_pcsr, LANES
+from .sparse import CSRMatrix
+from repro.kernels.paramspmm.ref import spmm_ref
+
+
+# ---------------------------------------------------------------- cuSPARSE
+def make_cusparse_analog(csr: CSRMatrix):
+    from jax.experimental import sparse as jsparse
+    rows = np.repeat(np.arange(csr.n_rows), csr.degrees)
+    bcoo = jsparse.BCOO((jnp.asarray(csr.data),
+                         jnp.asarray(np.stack([rows, csr.indices], 1))),
+                        shape=csr.shape)
+
+    @jax.jit
+    def fn(B):
+        return bcoo @ B
+    return fn
+
+
+# ----------------------------------------------------------------- GE-SpMM
+def make_gespmm_analog(csr: CSRMatrix):
+    indptr = np.asarray(csr.indptr)
+    indices = jnp.asarray(csr.indices, jnp.int32)
+    data = jnp.asarray(csr.data)
+    n = csr.n_rows
+
+    @jax.jit
+    def fn(B):
+        return spmm_ref(indptr, indices, data, B, n)
+    return fn
+
+
+# -------------------------------------------------------------- GNNAdvisor
+def gnnadvisor_config(dim: int) -> SpMMConfig:
+    f = max(1, -(-dim // LANES))           # F grows with dim, gap ignored
+    return SpMMConfig(V=1, S=True, F=min(f, 4), W=8)
+
+
+def make_gnnadvisor_analog(csr: CSRMatrix, dim: int):
+    cfg = gnnadvisor_config(dim)
+    pcsr = build_pcsr(csr.indptr, csr.indices, csr.data,
+                      csr.n_rows, csr.n_cols, cfg)
+    return functools.partial(engine_spmm, pcsr), cfg
+
+
+# ---------------------------------------------------------------- DA-SpMM
+def daspmm_space(dim: int):
+    """DA-SpMM's adaptivity without blocking (V) or coarsening (F)."""
+    return [SpMMConfig(V=1, S=s, F=1, W=r) for s in (False, True)
+            for r in (8, 16, 32)]

@@ -1,0 +1,108 @@
+"""Analytical TPU-v5e cost model for the ParamSpMM kernel.
+
+This is the napkin-math layer the perf loop reasons with (DESIGN.md §6) and
+the label source for decider training at corpus scale.  It prices the exact
+grid the kernel would execute — per (V,W) block populations come from
+``pcsr_stats`` so every padding effect the paper discusses is priced, not
+approximated:
+
+  * V padding (PR_V)      → more slots when vectors are half-empty;
+  * S chunk padding       → slots = Σ_b ceil(cnt_b/K)·K;
+  * F MAC-job gap         → J·Dblk ≥ dim lane waste;
+  * W scatter granularity → output-block traffic ∝ blocks touched.
+
+Hardware constants (TPU v5e, from the assignment + public specs):
+  197 TFLOP/s bf16 MXU — NOT the unit here: SpMM MACs run on the VPU;
+  we assume 8 sublanes × 128 lanes × 2 FMA × 0.94 GHz ≈ 1.9 TFLOP/s f32.
+  HBM 819 GB/s; per-step DMA issue overhead ~100 ns (double-buffered).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .pcsr import SpMMConfig, PCSRStats, pcsr_stats, LANES
+from .sparse import CSRMatrix
+
+HBM_BW = 819e9            # B/s
+VPU_FLOPS = 1.9e12        # f32 FMA/s (VPU, not MXU)
+STEP_OVERHEAD = 100e-9    # s per grid step not hidden by double buffering
+DTYPE_BYTES = 4
+
+
+@dataclass
+class CostBreakdown:
+    t_mem: float
+    t_compute: float
+    t_overhead: float
+    bytes_gather: float
+    bytes_meta: float
+    bytes_out: float
+    flops: float
+    steps: int
+
+    @property
+    def total(self) -> float:
+        return max(self.t_mem, self.t_compute) + self.t_overhead
+
+    @property
+    def bytes_total(self) -> float:
+        return self.bytes_gather + self.bytes_meta + self.bytes_out
+
+
+def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
+                dtype_bytes: int = DTYPE_BYTES) -> CostBreakdown:
+    """Price one SpMM under ⟨W,F,V,S⟩ given (V,W)-matched block stats."""
+    assert stats.V == config.V and stats.W == config.W
+    C, K, slots = stats.chunks_and_slots(config.S)
+    dblk = config.dblk
+    J = -(-dim // dblk)
+    steps = J * C * K
+    # B-row gathers: one (1, Dblk) tile per step
+    bytes_gather = steps * dblk * dtype_bytes
+    # per-chunk metadata (vals block + colidx/lrow/trow scalars), per j pass
+    bytes_meta = J * C * K * (config.V * 4 + 4 + 4)
+    # output blocks written once per (j, block) — revisits stay in VMEM
+    bytes_out = J * stats.n_nonempty_blocks * config.R * dblk * dtype_bytes
+    flops = 2.0 * steps * config.V * dblk
+    return CostBreakdown(
+        t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
+        t_compute=flops / VPU_FLOPS,
+        t_overhead=steps * STEP_OVERHEAD,
+        bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
+        flops=flops, steps=steps)
+
+
+class CostModel:
+    """Caches per-(V,W) stats for one matrix; prices any config × dim."""
+
+    def __init__(self, csr: CSRMatrix):
+        self.csr = csr
+        self._stats: dict[tuple[int, int], PCSRStats] = {}
+
+    def stats(self, V: int, W: int) -> PCSRStats:
+        key = (V, W)
+        if key not in self._stats:
+            self._stats[key] = pcsr_stats(self.csr.indptr, self.csr.indices,
+                                          self.csr.n_rows, self.csr.n_cols, V, W)
+        return self._stats[key]
+
+    def cost(self, dim: int, config: SpMMConfig) -> CostBreakdown:
+        return kernel_cost(self.stats(config.V, config.W), dim, config)
+
+    def time(self, dim: int, config: SpMMConfig) -> float:
+        return self.cost(dim, config).total
+
+    def best(self, dim: int, space) -> tuple[SpMMConfig, float]:
+        best_cfg, best_t = None, np.inf
+        for cfg in space:
+            t = self.time(dim, cfg)
+            if t < best_t:
+                best_cfg, best_t = cfg, t
+        return best_cfg, best_t
+
+
+def useful_flops(nnz: int, dim: int) -> float:
+    """MAC count of the mathematical SpMM (2·nnz·dim)."""
+    return 2.0 * nnz * dim

@@ -1,0 +1,105 @@
+"""ParamSpMM computing engine (paper Alg. 2) — pure-JAX implementation.
+
+Same PCSR traversal as the Pallas kernel, expressed as gather + scatter-add
+so it jit-compiles natively on any backend (CPU benchmarking, GNN training)
+and is differentiable.  The Pallas kernel in ``repro.kernels.paramspmm`` is
+the TPU artifact; both are validated against ``ref.py``.
+
+``make_spmm_fn`` builds the differentiable operator: the backward SpMM
+``dB = Aᵀ·dC`` runs a second PCSR built for ``Aᵀ`` — GNN training performs
+forward and backward SpMM exactly as the paper's PyTorch extension does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pcsr import PCSR, SpMMConfig, build_pcsr
+from .sparse import CSRMatrix
+
+
+@functools.partial(jax.jit, static_argnames=("V", "R", "K", "n_blocks", "n_rows"))
+def _engine(colidx, lrow, trow, vals, B, *, V, R, K, n_blocks, n_rows):
+    """Scatter-add evaluation of the packed PCSR chunks."""
+    ck = colidx.shape[0]
+    gathered = jnp.take(B, colidx, axis=0)                    # (C·K, dim)
+    base = jnp.repeat(trow, K).astype(jnp.int32) * R + lrow * V
+    valsf = jnp.swapaxes(vals, 1, 2).reshape(ck, V).astype(B.dtype)
+    out = jnp.zeros((n_blocks * R, B.shape[1]), B.dtype)
+    for v in range(V):                                        # V ≤ 2, unrolled
+        out = out.at[base + v].add(valsf[:, v][:, None] * gathered)
+    return out[:n_rows]
+
+
+def engine_spmm(pcsr: PCSR, B):
+    """C = A·B on the jit'd JAX engine."""
+    arrs = pcsr.to_jax()
+    cfg = pcsr.config
+    return _engine(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["vals"],
+                   jnp.asarray(B), V=cfg.V, R=cfg.R, K=pcsr.K,
+                   n_blocks=pcsr.n_blocks, n_rows=pcsr.n_rows)
+
+
+def make_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
+                 backend: str = "engine", interpret: bool = True):
+    """Build a differentiable ``f(B) = A·B`` closed over PCSR arrays.
+
+    backend: "engine" (pure JAX, fast on CPU) or "pallas" (TPU kernel,
+    interpret-mode on CPU).  The VJP uses the transpose PCSR when given,
+    otherwise gradients flow through the engine's gather/scatter directly.
+    """
+    if backend == "pallas":
+        from repro.kernels.paramspmm.ops import paramspmm as _fwd_call
+        fwd = lambda B: _fwd_call(pcsr, B, interpret=interpret)
+    else:
+        fwd = lambda B: engine_spmm(pcsr, B)
+
+    if pcsr_t is None:
+        return fwd
+
+    if backend == "pallas":
+        from repro.kernels.paramspmm.ops import paramspmm as _bwd_call
+        bwd = lambda dC: _bwd_call(pcsr_t, dC, interpret=interpret)
+    else:
+        bwd = lambda dC: engine_spmm(pcsr_t, dC)
+
+    @jax.custom_vjp
+    def f(B):
+        return fwd(B)
+
+    def f_fwd(B):
+        return fwd(B), None
+
+    def f_bwd(_, dC):
+        return (bwd(dC),)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+class ParamSpMMOperator:
+    """User-facing operator: holds forward + transpose PCSR for one sparse
+    matrix under one ⟨W,F,V,S⟩ configuration."""
+
+    def __init__(self, csr: CSRMatrix, config: SpMMConfig, *,
+                 backend: str = "engine", interpret: bool = True,
+                 build_transpose: bool = True):
+        self.csr = csr
+        self.config = config
+        self.backend = backend
+        self.pcsr = build_pcsr(csr.indptr, csr.indices, csr.data,
+                               csr.n_rows, csr.n_cols, config)
+        self.pcsr_t = None
+        if build_transpose:
+            t = csr.transpose()
+            self.pcsr_t = build_pcsr(t.indptr, t.indices, t.data,
+                                     t.n_rows, t.n_cols, config)
+        self._fn = make_spmm_fn(self.pcsr, self.pcsr_t,
+                                backend=backend, interpret=interpret)
+
+    def __call__(self, B):
+        return self._fn(B)

@@ -1,0 +1,301 @@
+"""Parameterized Compressed Sparse Row (PCSR) — TPU adaptation.
+
+The paper's PCSR stores ``rowPtr/colIdx/val/TRow`` parameterized by
+⟨W, F, V, S⟩ (Section 4.2).  On TPU the format is re-derived for a
+sequential Pallas grid (see DESIGN.md §2):
+
+* nonzeros are grouped into ``V×1`` column-vectors inside V-row *panels*
+  (vectorized blocking — one gathered row of ``B`` feeds V output rows);
+* ``W`` panels form an output *block* of ``R = V·W`` rows (the unit the
+  kernel accumulates in VMEM);
+* each block's vectors are packed into fixed-capacity *chunks* of ``K``
+  slots.  ``S=False`` → row-aligned chunks with capacity ≈ the maximum
+  block population (the static-grid analogue of "one warp per row");
+  ``S=True`` → capacity ``K = SG`` derived from the mean population
+  (the paper's Split Granularity, Eq. 3, with warp-size roundup replaced
+  by sublane roundup), so heavy blocks split across several chunks that
+  the kernel accumulates via consecutive output-block revisits (the
+  TPU analogue of the paper's ``TRow`` + ``atomicAdd``).
+
+Everything here is host-side preprocessing in vectorized numpy — the
+paper performs PCSR generation on the host as well, amortized across
+training iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+LANES = 128          # TPU lane width (the paper's warp size ω=32 analogue)
+SUBLANES = 8         # f32 sublane quantum
+
+# Memory guard for the unbalanced mode: a power-law max-degree block would
+# otherwise pad *every* chunk to the global max.  Capping keeps host memory
+# bounded while preserving the skew penalty the paper attributes to S=False.
+UNBALANCED_CAP = 8192
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-int(x) // m) * m
+
+
+@dataclass(frozen=True)
+class SpMMConfig:
+    """The paper's ⟨W, F, V, S⟩ tuple.
+
+    V: vector size of blocking (paper domain {1, 2}).
+    S: workload balancing on/off.
+    F: coarsening factor — dim-tile width ``Dblk = F·128`` lanes.
+    W: panels per output block — block height ``R = V·W`` rows.
+    """
+
+    V: int = 1
+    S: bool = False
+    F: int = 1
+    W: int = 8
+
+    def __post_init__(self):
+        if self.V < 1 or self.F < 1 or self.W < 1:
+            raise ValueError(f"invalid config {self}")
+
+    @property
+    def R(self) -> int:
+        return self.V * self.W
+
+    @property
+    def dblk(self) -> int:
+        return self.F * LANES
+
+    def astuple(self):
+        return (self.W, self.F, self.V, self.S)
+
+    def replace(self, **kw) -> "SpMMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def config_space(dim: int, max_f: int = 4):
+    """Enumerate the search domain for a given embedding dim.
+
+    V ∈ {1,2} (paper limits V to {1,2}: V=3 pads >50% on 97.5% of graphs);
+    S ∈ {False,True}; F ∈ [1, CEIL(dim/128)] (the paper's
+    F ∈ [1, CEIL(dim/ω)] with ω=128 on TPU); R = V·W ∈ {8,16,32}.
+    """
+    fs = list(range(1, min(max_f, _round_up(dim, LANES) // LANES) + 1))
+    out = []
+    for v in (1, 2):
+        for s in (False, True):
+            for f in fs:
+                for r in (8, 16, 32):
+                    out.append(SpMMConfig(V=v, S=s, F=f, W=r // v))
+    return out
+
+
+@dataclass
+class PCSR:
+    """Packed PCSR arrays (numpy, host-resident) + bookkeeping stats."""
+
+    config: SpMMConfig
+    n_rows: int            # rows of A (= rows of C)
+    n_cols: int            # cols of A (= rows of B)
+    n_blocks: int          # output blocks of R rows each
+    K: int                 # chunk capacity (slots)
+    colidx: np.ndarray     # (C·K,) int32 — B-row per slot (pad → 0)
+    lrow: np.ndarray       # (C·K,) int32 — panel idx within block
+    trow: np.ndarray       # (C,)   int32 — target block per chunk
+    init: np.ndarray       # (C,)   int32 — 1 iff first chunk of its block
+    vals: np.ndarray       # (C,V,K) float32 — vector values (pad → 0)
+    nnz: int
+    nnz_vec: int           # number of nonzero vectors
+    n_nonempty_blocks: int
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.trow.shape[0])
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_chunks * self.K
+
+    @property
+    def padding_ratio(self) -> float:
+        """PR_V (paper Eq. 2): 1 - nnz / (nnz_V · V)."""
+        if self.nnz_vec == 0:
+            return 0.0
+        return 1.0 - self.nnz / (self.nnz_vec * self.config.V)
+
+    @property
+    def split_ratio(self) -> float:
+        """SR (paper Eq. 4): reassigned-rowPtr length over original."""
+        return self.num_chunks / max(1, self.n_nonempty_blocks)
+
+    @property
+    def slot_fill(self) -> float:
+        """Fraction of chunk slots holding a real vector."""
+        return self.nnz_vec / max(1, self.num_slots)
+
+    def nbytes(self) -> int:
+        return (self.colidx.nbytes + self.lrow.nbytes + self.trow.nbytes
+                + self.init.nbytes + self.vals.nbytes)
+
+    def to_jax(self):
+        import jax.numpy as jnp
+        return {
+            "colidx": jnp.asarray(self.colidx),
+            "lrow": jnp.asarray(self.lrow),
+            "trow": jnp.asarray(self.trow),
+            "init": jnp.asarray(self.init),
+            "vals": jnp.asarray(self.vals),
+        }
+
+
+def _vectorize(indptr, indices, data, n_rows, n_cols, V):
+    """Group nonzeros into V×1 panel vectors.
+
+    Returns (vec_panel, vec_col, vec_val[nv, V]) sorted by (panel, col).
+    """
+    nnz = int(indices.shape[0])
+    if nnz == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros((0, V), np.float32))
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(indptr))
+    panel = rows // V
+    off = (rows - panel * V).astype(np.int64)
+    key = panel * n_cols + indices.astype(np.int64)
+    ukey, inv = np.unique(key, return_inverse=True)
+    vec_val = np.zeros((ukey.shape[0], V), np.float32)
+    # canonical CSR has unique (row, col); direct assignment is exact.
+    vec_val[inv, off] = data.astype(np.float32)
+    return ukey // n_cols, ukey % n_cols, vec_val
+
+
+def split_granularity(nnz_vec: int, n_nonempty_blocks: int) -> int:
+    """Paper Eq. 3: SG = CEILDIV(d̂_V, ω)·ω, sublane-aligned on TPU."""
+    mean = -(-max(1, nnz_vec) // max(1, n_nonempty_blocks))
+    return max(SUBLANES, _round_up(mean, SUBLANES))
+
+
+def build_pcsr(indptr, indices, data, n_rows, n_cols,
+               config: SpMMConfig, unbalanced_cap: int = UNBALANCED_CAP) -> PCSR:
+    """PCSR generation (paper §4.2), fully vectorized."""
+    V, W, S = config.V, config.W, config.S
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices, np.int64)
+    data = np.asarray(data)
+    nnz = int(indices.shape[0])
+    n_panels = max(1, _round_up(n_rows, V) // V)
+    n_blocks = max(1, _round_up(n_panels, W) // W)
+
+    vec_panel, vec_col, vec_val = _vectorize(indptr, indices, data,
+                                             n_rows, n_cols, V)
+    nv = int(vec_panel.shape[0])
+    bid = vec_panel // W                      # block of each vector (sorted)
+    lrow_vec = (vec_panel - bid * W).astype(np.int32)
+    counts = np.bincount(bid.astype(np.int64), minlength=n_blocks) if nv \
+        else np.zeros(n_blocks, np.int64)
+    nonempty = int((counts > 0).sum())
+
+    if S:
+        K = split_granularity(nv, nonempty)
+    else:
+        K = min(_round_up(max(1, counts.max() if nv else 1), SUBLANES),
+                _round_up(unbalanced_cap, SUBLANES))
+
+    nch = -(-counts // K)                     # chunks per block (0 if empty)
+    C = int(nch.sum())
+    if C == 0:                                # degenerate: all-zero matrix
+        return PCSR(config, n_rows, n_cols, n_blocks, K,
+                    np.zeros(K, np.int32), np.zeros(K, np.int32),
+                    np.zeros(1, np.int32), np.ones(1, np.int32),
+                    np.zeros((1, V, K), np.float32), nnz, nv, nonempty)
+
+    chunk_block_start = np.concatenate([[0], np.cumsum(nch)])  # (n_blocks+1,)
+    trow = np.repeat(np.arange(n_blocks, dtype=np.int64), nch).astype(np.int32)
+    init = np.zeros(C, np.int32)
+    init[chunk_block_start[:-1][nch > 0]] = 1
+
+    # slot of each vector: rank within its block → (chunk, slot)
+    block_vec_start = np.concatenate([[0], np.cumsum(counts)])
+    rank = np.arange(nv, dtype=np.int64) - block_vec_start[bid]
+    chunk_g = chunk_block_start[bid] + rank // K
+    slot = rank % K
+
+    colidx = np.zeros(C * K, np.int32)
+    lrow = np.zeros(C * K, np.int32)
+    vals = np.zeros((C, V, K), np.float32)
+    pos = chunk_g * K + slot
+    colidx[pos] = vec_col.astype(np.int32)
+    lrow[pos] = lrow_vec
+    vals[chunk_g[:, None], np.arange(V)[None, :], slot[:, None]] = vec_val
+    return PCSR(config, n_rows, n_cols, n_blocks, K, colidx, lrow,
+                trow, init, vals, nnz, nv, nonempty)
+
+
+@dataclass
+class PCSRStats:
+    """Exact per-(V, W) block-population stats — enough to cost every
+    (S, F) choice without materializing the packed arrays."""
+
+    n_rows: int
+    n_cols: int
+    nnz: int
+    V: int
+    W: int
+    nnz_vec: int
+    n_blocks: int
+    n_nonempty_blocks: int
+    max_block: int
+    mean_block: float
+    counts_hist: np.ndarray   # per-nonempty-block vector counts
+
+    def chunks_and_slots(self, S: bool, unbalanced_cap: int = UNBALANCED_CAP):
+        if self.n_nonempty_blocks == 0:
+            return 1, SUBLANES, SUBLANES
+        if S:
+            K = split_granularity(self.nnz_vec, self.n_nonempty_blocks)
+        else:
+            K = min(_round_up(max(1, self.max_block), SUBLANES),
+                    _round_up(unbalanced_cap, SUBLANES))
+        nch = -(-self.counts_hist // K)
+        C = int(nch.sum())
+        return C, K, C * K
+
+    @property
+    def padding_ratio(self) -> float:
+        if self.nnz_vec == 0:
+            return 0.0
+        return 1.0 - self.nnz / (self.nnz_vec * self.V)
+
+
+def pcsr_stats(indptr, indices, n_rows, n_cols, V: int, W: int) -> PCSRStats:
+    """Vectorization + block statistics only (cost model / features path)."""
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices, np.int64)
+    nnz = int(indices.shape[0])
+    n_panels = max(1, _round_up(n_rows, V) // V)
+    n_blocks = max(1, _round_up(n_panels, W) // W)
+    if nnz == 0:
+        return PCSRStats(n_rows, n_cols, 0, V, W, 0, n_blocks, 0, 0, 0.0,
+                         np.zeros(0, np.int64))
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(indptr))
+    key = (rows // V) * n_cols + indices
+    ukey = np.unique(key)
+    bid = (ukey // n_cols) // W
+    counts = np.bincount(bid, minlength=n_blocks)
+    ne = counts[counts > 0]
+    return PCSRStats(n_rows, n_cols, nnz, V, W, int(ukey.shape[0]), n_blocks,
+                     int(ne.shape[0]), int(ne.max()), float(ne.mean()),
+                     ne.astype(np.int64))
+
+
+def transpose_csr(indptr, indices, data, n_rows, n_cols):
+    """CSR of Aᵀ (for the backward SpMM dB = Aᵀ·dC)."""
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices, np.int64)
+    data = np.asarray(data)
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(indptr))
+    order = np.argsort(indices, kind="stable")
+    t_counts = np.bincount(indices, minlength=n_cols)
+    t_indptr = np.concatenate([[0], np.cumsum(t_counts)]).astype(np.int64)
+    return t_indptr, rows[order], data[order], n_cols, n_rows

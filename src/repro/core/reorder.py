@@ -1,0 +1,111 @@
+"""Graph reordering to enhance data locality (paper §4.4).
+
+The paper uses Rabbit Reordering (community detection + locality-aware ID
+assignment) as default preprocessing: nodes with shared neighbors get close
+IDs, creating consecutive same-column nonzeros for V=2 blocking (lower PR_2)
+and denser row bandwidth.  We implement the same *algorithmic role* with a
+deterministic two-level scheme (DESIGN.md §2): clustered BFS over the
+highest-degree seeds (communities = BFS trees capped at a size budget,
+mirroring Rabbit's hierarchical merging cutoff) with intra-community
+ordering by discovery, which is exactly the amortizable host-side step the
+paper describes.  A degree-sort baseline and identity are provided for the
+reordering ablation (paper Table 6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .sparse import CSRMatrix
+
+
+def rabbit_reorder(csr: CSRMatrix, community_budget: int | None = None,
+                   seed: int = 0) -> np.ndarray:
+    """Locality-aware ordering portfolio (Rabbit's role, DESIGN.md §2):
+    community-clustered BFS (connected-locality) AND neighbor-signature
+    sort (similar-neighbor locality, the co-citation structure V=2
+    exploits) — returns whichever yields the lower PR_2."""
+    from .pcsr import pcsr_stats
+
+    def pr2(c):
+        return pcsr_stats(c.indptr, c.indices, c.n_rows, c.n_cols,
+                          2, 4).padding_ratio
+
+    cands = [bfs_cluster_reorder(csr, community_budget, seed),
+             similarity_reorder(csr)]
+    best, best_pr = None, np.inf
+    for perm in cands:
+        p = pr2(apply_reorder(csr, perm))
+        if p < best_pr:
+            best, best_pr = perm, p
+    return best
+
+
+def similarity_reorder(csr: CSRMatrix) -> np.ndarray:
+    """Sort rows by a neighbor-set signature (3 smallest neighbor ids +
+    degree): rows with near-identical neighborhoods become adjacent —
+    exactly what vectorized blocking needs, even when those rows are not
+    connected to each other (directed co-citation)."""
+    n = csr.n_rows
+    deg = csr.degrees
+    sig = np.full((n, 3), csr.n_cols, np.int64)
+    for j in range(3):
+        has = deg > j
+        sig[has, j] = csr.indices[csr.indptr[:-1][has] + j]
+    order = np.lexsort((deg, sig[:, 2], sig[:, 1], sig[:, 0]))
+    perm = np.empty(n, np.int64)
+    perm[order] = np.arange(n)
+    return perm
+
+
+def bfs_cluster_reorder(csr: CSRMatrix, community_budget: int | None = None,
+                        seed: int = 0) -> np.ndarray:
+    """Return perm with node i → new ID perm[i] (community-clustered BFS)."""
+    n = csr.n_rows
+    if n == 0:
+        return np.zeros(0, np.int64)
+    if community_budget is None:
+        community_budget = max(64, int(np.sqrt(csr.nnz + 1)))
+    from collections import deque
+
+    deg = csr.degrees
+    order_seed = np.argsort(-deg, kind="stable")     # high-degree seeds first
+    visited = np.zeros(n, bool)
+    perm = np.empty(n, np.int64)
+    nxt = 0
+    indptr, indices = csr.indptr, csr.indices
+    for s in order_seed:
+        if visited[s]:
+            continue
+        # BFS from s; stop *expanding* at the community budget but always
+        # drain the queue so every visited node receives an ID.
+        q = deque([int(s)])
+        visited[s] = True
+        count = 0
+        while q:
+            u = q.popleft()
+            perm[u] = nxt
+            nxt += 1
+            count += 1
+            if count < community_budget:
+                for v in indices[indptr[u]:indptr[u + 1]]:
+                    if not visited[v]:
+                        visited[v] = True
+                        q.append(int(v))
+    assert nxt == n
+    return perm
+
+
+def degree_reorder(csr: CSRMatrix) -> np.ndarray:
+    """Descending-degree relabel (cheap locality baseline)."""
+    order = np.argsort(-csr.degrees, kind="stable")
+    perm = np.empty(csr.n_rows, np.int64)
+    perm[order] = np.arange(csr.n_rows)
+    return perm
+
+
+def identity_order(csr: CSRMatrix) -> np.ndarray:
+    return np.arange(csr.n_rows, dtype=np.int64)
+
+
+def apply_reorder(csr: CSRMatrix, perm: np.ndarray) -> CSRMatrix:
+    return csr.permute(perm)

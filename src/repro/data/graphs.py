@@ -1,0 +1,214 @@
+"""Synthetic graph corpus with controlled input diversity.
+
+The paper evaluates on 202 SNAP/DIMACS10 matrices spanning data locality,
+degree distribution, and size (§6.2: n 1e3–7.7e6, ρ 2.7e-7–0.025,
+CV 0.006–58).  Offline we reproduce that *diversity* with deterministic
+generators that target each axis:
+
+  rmat        — power-law, high CV (social-network analogue, sx-*)
+  ba          — Barabási-Albert preferential attachment (power-law)
+  er          — Erdős–Rényi (Poisson degrees, balanced: road/traffic-like)
+  grid2d      — lattice (extreme locality, low constant degree: DIMACS road)
+  sbm         — stochastic block model (community structure: coPapers-*)
+  kregular    — random regular (perfectly balanced degrees)
+
+Each generator takes ``shuffle=True`` to destroy ID locality (the
+reordering/blocking ablations toggle it).  All graphs are undirected
+(symmetrized), weighted 1.0, canonical CSR.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.sparse import CSRMatrix
+
+
+def _finish(src, dst, n, shuffle, seed) -> CSRMatrix:
+    mask = src != dst                      # drop self loops
+    src, dst = src[mask], dst[mask]
+    if shuffle:
+        perm = np.random.default_rng(seed + 7).permutation(n)
+        src, dst = perm[src], perm[dst]
+    csr = CSRMatrix.from_edges(src, dst, n, symmetrize=True)
+    # binarize (duplicate edges summed by from_coo → clamp back to 1.0)
+    csr.data = np.ones_like(csr.data)
+    return csr
+
+
+def rmat(n_log2: int, avg_deg: int, seed: int = 0, shuffle: bool = False,
+         a=0.57, b=0.19, c=0.19) -> CSRMatrix:
+    n = 1 << n_log2
+    ne = n * avg_deg // 2
+    rng = np.random.default_rng(seed)
+    src = np.zeros(ne, np.int64)
+    dst = np.zeros(ne, np.int64)
+    for lvl in range(n_log2):
+        r = rng.random(ne)
+        go_s = (r >= a + b) & (r < a + b + c) | (r >= a + b + c)
+        go_d = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        src = src * 2 + go_s
+        dst = dst * 2 + go_d
+    return _finish(src, dst, n, shuffle, seed)
+
+
+def ba(n: int, m: int, seed: int = 0, shuffle: bool = False) -> CSRMatrix:
+    """Barabási–Albert via the repeated-edge-endpoint trick (vectorized)."""
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [], []
+    targets = np.arange(m, dtype=np.int64)
+    repeated = list(range(m))
+    for v in range(m, n):
+        src_l.append(np.full(m, v, np.int64))
+        dst_l.append(targets.copy())
+        repeated.extend(targets.tolist())
+        repeated.extend([v] * m)
+        pick = rng.integers(0, len(repeated), m)
+        targets = np.array([repeated[p] for p in pick], np.int64)
+    return _finish(np.concatenate(src_l), np.concatenate(dst_l), n,
+                   shuffle, seed)
+
+
+def er(n: int, avg_deg: float, seed: int = 0, shuffle: bool = False) -> CSRMatrix:
+    rng = np.random.default_rng(seed)
+    ne = int(n * avg_deg / 2)
+    src = rng.integers(0, n, ne)
+    dst = rng.integers(0, n, ne)
+    return _finish(src, dst, n, shuffle, seed)
+
+
+def grid2d(side: int, seed: int = 0, shuffle: bool = False) -> CSRMatrix:
+    n = side * side
+    idx = np.arange(n).reshape(side, side)
+    right = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()])
+    down = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()])
+    e = np.concatenate([right, down], axis=1)
+    return _finish(e[0], e[1], n, shuffle, seed)
+
+
+def sbm(n_blocks: int, block_size: int, p_in: float, p_out_deg: float,
+        seed: int = 0, shuffle: bool = False) -> CSRMatrix:
+    """Stochastic block model: dense communities + sparse global edges."""
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_size
+    src_l, dst_l = [], []
+    ne_in = int(p_in * block_size * (block_size - 1) / 2)
+    for b in range(n_blocks):
+        s = rng.integers(0, block_size, ne_in) + b * block_size
+        d = rng.integers(0, block_size, ne_in) + b * block_size
+        src_l.append(s)
+        dst_l.append(d)
+    ne_out = int(n * p_out_deg / 2)
+    src_l.append(rng.integers(0, n, ne_out))
+    dst_l.append(rng.integers(0, n, ne_out))
+    return _finish(np.concatenate(src_l), np.concatenate(dst_l), n,
+                   shuffle, seed)
+
+
+def clones(n_base: int, deg: int, clone: int = 2, mutate: float = 0.15,
+           seed: int = 0, shuffle: bool = False,
+           directed: bool = True) -> CSRMatrix:
+    """Co-citation-style graph (coPapers analogue): consecutive ``clone``
+    rows share most of their neighbor set — the structure that vectorized
+    blocking (V=2) exploits (low PR_2).  Directed by default: symmetrizing
+    scatters the clone structure across reverse rows."""
+    rng = np.random.default_rng(seed)
+    n = n_base * clone
+    src_l, dst_l = [], []
+    for c in range(clone):
+        base_dst = rng.integers(0, n, (n_base, deg))
+        if c == 0:
+            shared = base_dst
+        else:
+            mut = rng.random((n_base, deg)) < mutate
+            base_dst = np.where(mut, base_dst, shared)
+        rows = (np.arange(n_base) * clone + c)[:, None]
+        src_l.append(np.broadcast_to(rows, base_dst.shape).ravel())
+        dst_l.append(base_dst.ravel())
+    src = np.concatenate(src_l)
+    dst = np.concatenate(dst_l)
+    if directed:
+        mask = src != dst
+        src, dst = src[mask], dst[mask]
+        if shuffle:
+            perm = np.random.default_rng(seed + 7).permutation(n)
+            src, dst = perm[src], perm[dst]
+        csr = CSRMatrix.from_coo(src, dst, np.ones(src.shape[0], np.float32),
+                                 n, n)
+        csr.data = np.ones_like(csr.data)
+        return csr
+    return _finish(src, dst, n, shuffle, seed)
+
+
+def kregular(n: int, k: int, seed: int = 0, shuffle: bool = False) -> CSRMatrix:
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [], []
+    for _ in range(k // 2):
+        perm = rng.permutation(n)
+        src_l.append(perm)
+        dst_l.append(np.roll(perm, 1))
+    return _finish(np.concatenate(src_l), np.concatenate(dst_l), n,
+                   shuffle, seed)
+
+
+@dataclass
+class GraphSpec:
+    name: str
+    csr: CSRMatrix
+    family: str
+
+
+def corpus(scale: str = "small") -> list[GraphSpec]:
+    """Deterministic graph corpus. ``small`` ≈ unit tests / CI;
+    ``bench`` ≈ decider training + paper-table benchmarks."""
+    out = []
+
+    def add(name, family, g):
+        out.append(GraphSpec(name, g, family))
+
+    if scale == "small":
+        add("rmat10", "powerlaw", rmat(10, 8, seed=1))
+        add("er1k", "uniform", er(1000, 8, seed=2))
+        add("grid32", "mesh", grid2d(32, seed=3))
+        add("sbm8x64", "community", sbm(8, 64, 0.3, 1.0, seed=4))
+        add("ba1k", "powerlaw", ba(1000, 4, seed=5))
+        return out
+
+    sizes = [(12, 8), (13, 8), (14, 6), (15, 4), (16, 4)]
+    seed = 0
+    for lg, d in sizes:
+        for sh in (False, True):
+            tag = "_sh" if sh else ""
+            add(f"rmat{lg}{tag}", "powerlaw", rmat(lg, d, seed, shuffle=sh))
+            seed += 1
+    for n, d in [(4000, 6), (16000, 8), (60000, 6), (150000, 4)]:
+        for sh in (False, True):
+            tag = "_sh" if sh else ""
+            add(f"er{n}{tag}", "uniform", er(n, d, seed, shuffle=sh))
+            seed += 1
+    for side in (64, 128, 256, 384):
+        for sh in (False, True):
+            tag = "_sh" if sh else ""
+            add(f"grid{side}{tag}", "mesh", grid2d(side, seed, shuffle=sh))
+            seed += 1
+    for nb, bs, pin in [(16, 128, 0.25), (32, 256, 0.12), (64, 512, 0.03),
+                        (24, 1024, 0.015)]:
+        for sh in (False, True):
+            tag = "_sh" if sh else ""
+            add(f"sbm{nb}x{bs}{tag}", "community",
+                sbm(nb, bs, pin, 1.0, seed, shuffle=sh))
+            seed += 1
+    for n, k in [(8000, 8), (40000, 6), (120000, 4)]:
+        add(f"kreg{n}", "uniform", kregular(n, k, seed))
+        seed += 1
+    for n, m in [(4000, 6), (20000, 5), (80000, 3)]:
+        add(f"ba{n}", "powerlaw", ba(n, m, seed))
+        seed += 1
+    for nb, d in [(4000, 12), (16000, 10), (50000, 8)]:
+        for sh in (False, True):
+            tag = "_sh" if sh else ""
+            add(f"clones{nb}{tag}", "cocitation",
+                clones(nb, d, seed=seed, shuffle=sh))
+            seed += 1
+    return out

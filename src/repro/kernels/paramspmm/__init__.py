@@ -1,0 +1,2 @@
+from .ops import paramspmm
+from .ref import spmm_ref, spmm_dense_ref

@@ -1,0 +1,79 @@
+"""ParamSpMM Pallas TPU kernel (paper Alg. 2, TPU adaptation per DESIGN.md §2).
+
+Grid ``(J, C, K)`` = (dim-tiles, chunks, slots).  Scalar-prefetched
+``colidx`` drives the gather of one ``(1, Dblk)`` row of ``B`` per step via
+``B``'s BlockSpec index map — the TPU-idiomatic replacement for the CUDA
+warp's irregular global load.  The ``(R, Dblk)`` output block is revisited
+across consecutive steps with the same ``trow`` and accumulated in VMEM:
+with ``S=True`` several chunks target one block (the paper's ``TRow`` +
+``atomicAdd``, made race-free by the sequential grid).
+
+Parameter mapping (paper → here):
+  V → rows fed per gathered B row (vals block ``(1, V, K)``);
+  F → ``Dblk = F·128`` lanes per step (thread coarsening);
+  W → ``R = V·W`` output-block rows;
+  S → chunking policy baked into the PCSR arrays (kernel is agnostic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref,   # scalar prefetch
+            vals_ref, b_ref,                            # VMEM inputs
+            out_ref,                                    # VMEM output
+            *, V: int, K: int):
+    c = pl.program_id(1)
+    k = pl.program_id(2)
+
+    # First visit of this output block in this dim-tile pass → zero it.
+    @pl.when((k == 0) & (init_ref[c] == 1))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lr = lrow_ref[c * K + k]                 # panel within block
+    vv = vals_ref[0, :, k]                   # (V,) vector values
+    brow = b_ref[0, :]                       # (Dblk,) gathered B row
+    row = lr * V
+    acc = out_ref[pl.ds(row, V), :]
+    out_ref[pl.ds(row, V), :] = acc + vv[:, None].astype(brow.dtype) * brow[None, :]
+
+
+def paramspmm_kernel(colidx, lrow, trow, init, vals, B_padded, *,
+                     n_blocks: int, R: int, V: int, K: int, dblk: int,
+                     interpret: bool = True):
+    """Invoke the Pallas kernel on pre-padded operands.
+
+    B_padded: (n_b, J·dblk).  Returns C_padded (n_blocks·R, J·dblk).
+    """
+    C = trow.shape[0]
+    dim_pad = B_padded.shape[1]
+    assert dim_pad % dblk == 0
+    J = dim_pad // dblk
+    grid = (J, C, K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            # whole chunk's vals; index map constant in k → fetched once/chunk
+            pl.BlockSpec((1, V, K), lambda j, c, k, ci, lr, tr, it: (c, 0, 0)),
+            # the gather: B row chosen by the scalar-prefetched colidx
+            pl.BlockSpec((1, dblk),
+                         lambda j, c, k, ci, lr, tr, it: (ci[c * K + k], j)),
+        ],
+        out_specs=pl.BlockSpec((R, dblk),
+                               lambda j, c, k, ci, lr, tr, it: (tr[c], j)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, V=V, K=K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks * R, dim_pad), B_padded.dtype),
+        interpret=interpret,
+        name=f"paramspmm_v{V}_k{K}_r{R}_d{dblk}",
+    )
+    return fn(colidx, lrow, trow, init, vals, B_padded)

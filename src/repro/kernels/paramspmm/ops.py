@@ -1,0 +1,47 @@
+"""Jit'd wrapper around the ParamSpMM Pallas kernel: padding, dispatch,
+and the high-level ``paramspmm(pcsr, B)`` entry point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pcsr import PCSR, LANES
+from .kernel import paramspmm_kernel
+
+
+def _pad_cols(B, dblk: int):
+    dim = B.shape[1]
+    dim_pad = -(-dim // dblk) * dblk
+    if dim_pad != dim:
+        B = jnp.pad(B, ((0, 0), (0, dim_pad - dim)))
+    return B, dim_pad
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "interpret"))
+def _call(colidx, lrow, trow, init, vals, B, *, n_blocks, R, V, K, dblk,
+          n_rows, dim, interpret):
+    B_padded, _ = _pad_cols(B, dblk)
+    out = paramspmm_kernel(colidx, lrow, trow, init, vals, B_padded,
+                           n_blocks=n_blocks, R=R, V=V, K=K, dblk=dblk,
+                           interpret=interpret)
+    # blocks with no chunk are never visited by the grid → their output
+    # region is uninitialized; those rows of A are empty ⇒ force zero.
+    visited = jnp.zeros(n_blocks, bool).at[trow].set(True)
+    out = jnp.where(jnp.repeat(visited, R)[:, None], out, 0.0)
+    return out[:n_rows, :dim]
+
+
+def paramspmm(pcsr: PCSR, B, *, interpret: bool = True):
+    """C = A·B where A is held as PCSR. Pallas path (interpret on CPU)."""
+    arrs = pcsr.to_jax()
+    cfg = pcsr.config
+    return _call(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["init"],
+                 arrs["vals"], jnp.asarray(B),
+                 n_blocks=pcsr.n_blocks, R=cfg.R, V=cfg.V, K=pcsr.K,
+                 dblk=cfg.dblk, n_rows=pcsr.n_rows, dim=B.shape[1],
+                 interpret=interpret)

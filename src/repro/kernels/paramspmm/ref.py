@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for ParamSpMM: basic row-wise CSR SpMM (paper Alg. 1).
+
+This is both the correctness reference for the Pallas kernel / JAX engine
+and the "static kernel" baseline family (GE-SpMM-style CSR traversal).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_ref(indptr, indices, data, B, n_rows: int):
+    """C[n_rows, dim] = A · B with A given as CSR (gather + segment-sum)."""
+    indptr = np.asarray(indptr)
+    rows = np.repeat(np.arange(n_rows), np.diff(indptr))
+    rows = jnp.asarray(rows, jnp.int32)
+    indices = jnp.asarray(indices, jnp.int32)
+    data = jnp.asarray(data, B.dtype)
+    gathered = jnp.take(B, indices, axis=0)          # (nnz, dim)
+    contrib = data[:, None] * gathered
+    return jax.ops.segment_sum(contrib, rows, num_segments=n_rows)
+
+
+def spmm_dense_ref(A_dense, B):
+    """Dense oracle for small property tests."""
+    return jnp.asarray(A_dense) @ jnp.asarray(B)

@@ -1,0 +1,2 @@
+from .ops import selective_scan
+from .ref import selective_scan_ref

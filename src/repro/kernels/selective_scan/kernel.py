@@ -1,0 +1,66 @@
+"""Fused selective-scan (mamba recurrence) Pallas TPU kernel.
+
+Identified in EXPERIMENTS.md §Perf (hymba cell): the XLA
+``associative_scan`` materializes the (B,S,Di,N) hidden-state tensor at
+every combine level (~log2(S) HBM round-trips).  This kernel runs the
+recurrence sequentially over sequence chunks with the state resident in a
+VMEM scratch and fuses the C-contraction, so the hidden states NEVER
+reach HBM: traffic = read dA/dBx/C once + write y once (the memory-term
+floor).
+
+    h_t = dA_t ⊙ h_{t-1} + dBx_t          (N, Di) per (batch, tile)
+    y_t = Σ_n h_t[n, :] · C_t[n]
+
+Layout: Di innermost (lanes, 128-tiled); N on sublanes.  Grid
+(B, Di-tiles, S-chunks), sequence innermost so the scratch state carries
+across consecutive chunk steps; reset at chunk 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(da_ref, dbx_ref, c_ref, y_ref, h_scratch, *, chunk: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _reset():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    def step(t, h):
+        da = da_ref[0, t]                        # (N, tile)
+        dbx = dbx_ref[0, t]
+        c = c_ref[0, t]                          # (N,)
+        h = da * h + dbx
+        y_ref[0, t, :] = jnp.sum(h * c[:, None], axis=0)
+        return h
+
+    h_scratch[...] = jax.lax.fori_loop(0, chunk, step, h_scratch[...])
+
+
+def selective_scan_kernel(dA, dBx, C, *, chunk: int = 128, tile: int = 128,
+                          interpret: bool = True):
+    """dA/dBx (B, S, N, Di) f32, C (B, S, N) f32 → y (B, S, Di) f32.
+    S must divide by ``chunk`` and Di by ``tile`` (ops.py pads)."""
+    B, S, N, Di = dA.shape
+    assert S % chunk == 0 and Di % tile == 0
+    grid = (B, Di // tile, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, N, tile), lambda b, d, s: (b, s, 0, d)),
+            pl.BlockSpec((1, chunk, N, tile), lambda b, d, s: (b, s, 0, d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, tile), lambda b, d, s: (b, s, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, tile), jnp.float32)],
+        interpret=interpret,
+        name=f"selective_scan_c{chunk}_t{tile}",
+    )(dA, dBx, C)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper: padding + layout for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import selective_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "tile", "interpret"))
+def selective_scan(dA, dBx, C, *, chunk: int = 128, tile: int = 128,
+                   interpret: bool = True):
+    """dA/dBx (B, S, N, Di), C (B, S, N) → y (B, S, Di).  Pads S to the
+    chunk and Di to the lane tile (dA=1, dBx=0 padding is recurrence-
+    neutral; padded Di columns are sliced off)."""
+    B, S, N, Di = dA.shape
+    sp = -(-S // chunk) * chunk
+    dp = -(-Di // tile) * tile
+    if sp != S:
+        pad = ((0, 0), (0, sp - S), (0, 0), (0, 0))
+        dA = jnp.pad(dA, pad, constant_values=1.0)
+        dBx = jnp.pad(dBx, pad)
+        C = jnp.pad(C, ((0, 0), (0, sp - S), (0, 0)))
+    if dp != Di:
+        pad = ((0, 0), (0, 0), (0, 0), (0, dp - Di))
+        dA = jnp.pad(dA, pad, constant_values=1.0)
+        dBx = jnp.pad(dBx, pad)
+    y = selective_scan_kernel(dA.astype(jnp.float32),
+                              dBx.astype(jnp.float32),
+                              C.astype(jnp.float32),
+                              chunk=chunk, tile=tile, interpret=interpret)
+    return y[:, :S, :Di]

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init; only the dry-run sees 512 placeholder devices.
+
+For each cell:  jit(step).lower(**ShapeDtypeStructs).compile() under the
+production mesh; print memory_analysis (fits?) and cost_analysis
+(FLOPs/bytes for §Roofline); write JSON to experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.models import lm
+from . import roofline, sharding as sh, steps
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def compile_cell(cfg, cell, mesh, *, chunk=1024, opts=None):
+    from repro.models.common import set_perf_options, reset_perf_options
+    opts = opts or {}
+    reset_perf_options()
+    from repro.models.common import PERF_DEFAULTS
+    set_perf_options(**{k: v for k, v in opts.items()
+                        if k in PERF_DEFAULTS})
+    with mesh:
+        if cell.kind == "train":
+            fn = steps.jit_train_step(cfg, cell, mesh, chunk=chunk,
+                                      zero1=opts.get("zero1", False))
+            args = (lm.param_specs(cfg), steps.opt_state_specs(cfg),
+                    lm.input_specs(cfg, cell))
+        elif cell.kind == "prefill":
+            fn = steps.jit_prefill_step(cfg, cell, mesh, chunk=chunk)
+            args = (lm.param_specs(cfg), lm.input_specs(cfg, cell))
+        else:   # decode
+            fn = steps.jit_decode_step(
+                cfg, cell, mesh,
+                shard_cache_seq=opts.get("shard_cache_seq", False))
+            args = (lm.param_specs(cfg),
+                    lm.input_specs(cfg, cell)["token"],
+                    lm.cache_specs(cfg, cell),
+                    jax.ShapeDtypeStruct((), jax.numpy.int32))
+        return fn.lower(*args).compile()
+
+
+def _cost(compiled):
+    """Flat cost vector: flops, bytes, per-kind collective count/bytes.
+
+    bytes      — fusion-aware HBM estimate (roofline.hbm_bytes_fused);
+    bytes_raw  — cost_analysis()'s unfused upper bound, kept for record.
+    """
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    det = roofline.collective_bytes(txt)
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes": roofline.hbm_bytes_fused(txt),
+           "bytes_raw": float(ca.get("bytes accessed", 0.0))}
+    for k, (n, b) in det.items():
+        out[f"coll::{k}::n"] = float(n)
+        out[f"coll::{k}::b"] = float(b)
+    return out
+
+
+def _vec(op, *costs):
+    keys = set().union(*[c.keys() for c in costs])
+    return {k: max(0.0, op(*[c.get(k, 0.0) for c in costs])) for k in keys}
+
+
+def _unflatten_cost(flat):
+    coll = {}
+    for k, v in flat.items():
+        if k.startswith("coll::"):
+            _, kind, field = k.split("::")
+            e = coll.setdefault(kind, [0, 0])
+            e[0 if field == "n" else 1] = int(v)
+    return {"flops": flat.get("flops", 0.0), "bytes": flat.get("bytes", 0.0),
+            "bytes_raw": flat.get("bytes_raw", 0.0),
+            "coll": {k: tuple(v) for k, v in coll.items()}}
+
+
+def _layer_variants(cfg):
+    """(base_cfg, [(true_count, variant_cfg), ...]) for scan-trip
+    extrapolation — cost_analysis counts a while body ONCE regardless of
+    trip count, so cost variants compile with layer scans UNROLLED
+    (models.common cost mode) at L ∈ {1,2} and extrapolate linearly."""
+    if cfg.family == "hybrid":
+        base = cfg.replace(n_layers=2, n_global_layers=1)
+        return base, [
+            (cfg.n_layers - cfg.n_global_layers,
+             cfg.replace(n_layers=3, n_global_layers=1)),
+            (cfg.n_global_layers,
+             cfg.replace(n_layers=3, n_global_layers=2)),
+        ]
+    if cfg.family == "encdec":
+        base = cfg.replace(n_layers=1, n_enc_layers=1)
+        return base, [
+            (cfg.n_layers, cfg.replace(n_layers=2, n_enc_layers=1)),
+            (cfg.n_enc_layers, cfg.replace(n_layers=1, n_enc_layers=2)),
+        ]
+    base = cfg.replace(n_layers=1)
+    return base, [(cfg.n_layers, cfg.replace(n_layers=2))]
+
+
+def scan_aware_cost(cfg, cell, mesh, *, opts=None):
+    """Roofline cost with scan-trip correction.  Cost compiles run in
+    cost mode (unrolled layer/time scans) and with chunk=seq (no q-chunk
+    or loss-chunk while loops).  RWKV's time recurrence additionally
+    needs (L, S) bilinear extrapolation — its per-token cost lives in a
+    4096..524288-trip time scan that can only be unrolled at tiny S."""
+    from repro.models.common import set_cost_mode
+    set_cost_mode(True)
+    try:
+        if cfg.family == "ssm" and cell.kind != "decode":
+            return _rwkv_bilinear_cost(cfg, cell, mesh, opts=opts)
+        chunk = cell.seq_len
+        base_cfg, variants = _layer_variants(cfg)
+        base = _cost(compile_cell(base_cfg, cell, mesh, chunk=chunk,
+                                  opts=opts))
+        flat = dict(base)
+        for count, vc in variants:
+            var = _cost(compile_cell(vc, cell, mesh, chunk=chunk, opts=opts))
+            delta = _vec(lambda v, b: v - b, var, base)
+            flat = _vec(lambda t, d: t + (count - 1) * d, flat, delta)
+        return _unflatten_cost(flat)
+    finally:
+        set_cost_mode(False)
+
+
+def _rwkv_bilinear_cost(cfg, cell, mesh, *, opts=None, s0=16, s1=32):
+    """cost(L,S) = α + βL + γS + δLS fitted from 4 unrolled compiles."""
+    from repro.configs.base import ShapeCell
+
+    def cc(L, S):
+        c = ShapeCell(cell.name, S, cell.global_batch, cell.kind)
+        return _cost(compile_cell(cfg.replace(n_layers=L), c, mesh,
+                                  chunk=S, opts=opts))
+
+    c11, c21 = cc(1, s0), cc(2, s0)
+    c12, c22 = cc(1, s1), cc(2, s1)
+    L, S = cfg.n_layers, cell.seq_len
+    ds = s1 - s0
+
+    def fit(k):
+        a11, a21 = c11.get(k, 0.0), c21.get(k, 0.0)
+        a12, a22 = c12.get(k, 0.0), c22.get(k, 0.0)
+        delta = ((a22 - a12) - (a21 - a11)) / ds
+        beta = (a21 - a11) - delta * s0
+        gamma = (a12 - a11) / ds - delta
+        alpha = a11 - beta - gamma * s0 - delta * s0
+        return max(0.0, alpha + beta * L + gamma * S + delta * L * S)
+
+    keys = set(c11) | set(c21) | set(c12) | set(c22)
+    return _unflatten_cost({k: fit(k) for k in keys})
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, verbose=True,
+             opts=None, full_compile=True):
+    t0 = time.time()
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = 512 if mesh_name == "multi" else 256
+
+    # 1) full-config compile: proof of lowering + memory analysis
+    if full_compile:
+        compiled = compile_cell(cfg, cell, mesh, opts=opts)
+        ma = compiled.memory_analysis()
+        peak = int(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                   + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        mem = {"per_device_bytes": peak,
+               "arg_bytes": int(ma.argument_size_in_bytes),
+               "temp_bytes": int(ma.temp_size_in_bytes)}
+        del compiled
+    else:
+        mem = {}
+
+    # 2) scan-trip-corrected roofline terms
+    cost = scan_aware_cost(cfg, cell, mesh, opts=opts)
+    coll_bytes = float(sum(b for _, b in cost["coll"].values()))
+    t_c = cost["flops"] / roofline.PEAK_FLOPS
+    t_m = cost["bytes"] / roofline.HBM_BW
+    t_x = coll_bytes / roofline.LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    mf = roofline.model_flops_for(cfg, cell)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "ok": True,
+        "compile_s": round(time.time() - t0, 1), **mem,
+        "flops": cost["flops"], "hbm_bytes": cost["bytes"],
+        "hbm_bytes_raw": cost.get("bytes_raw", 0.0),
+        "coll_bytes": coll_bytes, "coll_detail": cost["coll"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops": mf,
+        "useful_ratio": mf / max(1.0, cost["flops"] * n_dev),
+        "opts": opts or {},
+    }
+    if verbose:
+        mem_s = (f"mem/dev={rec['per_device_bytes']/2**30:.2f}GiB "
+                 if mem else "")
+        print(f"[{arch} × {shape} × {mesh_name}] OK "
+              f"compile={rec['compile_s']}s {mem_s}"
+              f"t=(c {t_c*1e3:.2f} | m {t_m*1e3:.2f} | "
+              f"x {t_x*1e3:.2f})ms → {rec['bottleneck']} "
+              f"useful={rec['useful_ratio']:.3f}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="perf option key=value (zero1=true, "
+                         "moe_dispatch=batched, remat_policy=dots, "
+                         "ssm_scan_dtype=bfloat16, shard_cache_seq=true)")
+    args = ap.parse_args(argv)
+
+    opts = {}
+    for o in args.opt:
+        k, v = o.split("=", 1)
+        opts[k] = {"true": True, "false": False}.get(v, v)
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape else applicable_shapes(cfg))
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}_{shape}_{mesh_name}"
+                try:
+                    rec = run_cell(arch, shape, mesh_name, opts=opts)
+                except Exception as e:   # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "ok": False, "error": f"{type(e).__name__}: {e}"}
+                    failures.append(key)
+                with open(os.path.join(args.out, key + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete: all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

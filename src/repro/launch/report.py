@@ -1,0 +1,108 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON records (idempotent: replaces between markers)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = "experiments/dryrun"
+TARGET = "EXPERIMENTS.md"
+MARK_A = "<!-- AUTOGEN:DRYRUN -->"
+MARK_B = "<!-- AUTOGEN:END -->"
+
+
+def load(dirname=DRYRUN_DIR):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile_s | args GiB/dev | "
+           "temp GiB/dev | collectives (count) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAIL | | | {r.get('error','')} |")
+            continue
+        det = r.get("coll_detail", {})
+        cd = "; ".join(f"{k}×{v[0]}" for k, v in sorted(det.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_s','')} | {fmt_bytes(r.get('arg_bytes',0))} | "
+            f"{fmt_bytes(r.get('temp_bytes',0))} | {cd} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="single"):
+    out = ["| arch | shape | t_compute s | t_memory s | t_collective s | "
+           "bottleneck | MODEL_FLOPS | useful ratio |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok") or r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f} | "
+            f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | "
+            f"**{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+def render(rows):
+    return f"""{MARK_A}
+## §Dry-run — lower+compile proof, memory analysis, collective schedule
+
+Every (architecture × applicable shape) cell compiled on BOTH production
+meshes: single-pod (16×16 = 256 chips, axes data×model) and multi-pod
+(2×16×16 = 512 chips, axes pod×data×model).  {sum(1 for r in rows if r.get('ok'))} compilations OK,
+{sum(1 for r in rows if not r.get('ok'))} failed.  ``long_500k`` runs only for the sub-quadratic archs
+(hymba, rwkv6) per the assignment; the 8 full-attention archs skip it
+(DESIGN.md §4).  Args/temp are the CPU-backend ``memory_analysis()``
+(args exact; temp an unfused upper bound — see §Roofline method note).
+
+{dryrun_table(rows)}
+
+## §Roofline — per-cell terms (single-pod), scan-trip-corrected
+
+Terms per DESIGN.md §6: compute = HLO_FLOPs/dev ÷ 197 TF/s; memory =
+fusion-aware HBM bytes ÷ 819 GB/s; collective = Σ collective result
+bytes ÷ 50 GB/s.  ``useful ratio`` = MODEL_FLOPS / (HLO_FLOPs × chips)
+(6·N_active·tokens for train, 2·N_active·tokens for serve).
+
+{roofline_table(rows, "single")}
+
+### Multi-pod (512-chip) roofline
+
+{roofline_table(rows, "multi")}
+{MARK_B}"""
+
+
+def main():
+    rows = load()
+    block = render(rows)
+    if os.path.exists(TARGET):
+        text = open(TARGET).read()
+        if MARK_A in text and MARK_B in text:
+            pre = text.split(MARK_A)[0]
+            post = text.split(MARK_B)[1]
+            text = pre + block + post
+        else:
+            text = text + "\n" + block + "\n"
+    else:
+        text = block + "\n"
+    with open(TARGET, "w") as f:
+        f.write(text)
+    print(f"wrote {TARGET} ({len(rows)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Role → PartitionSpec resolution (Megatron-style TP + DP/pod batch
+sharding + EP for MoE), with deliberate divisibility fallbacks:
+
+  col    — shard output features; fallback: contracting dim (row-parallel
+           partial sums); fallback: replicate.  Handles odd-head archs
+           (hymba 25H, whisper 6H) per DESIGN.md §5.
+  row    — shard contracting dim; fallbacks symmetric.
+  embed  — vocab-parallel embedding/unembedding.
+  expert — shard the expert dim (EP); fallback: shard expert FFN features
+           (granite-3b's 40 experts don't divide 16 → TP inside experts).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from .mesh import data_axes, model_axis_size
+
+
+def _try_dims(shape, dims, parts, axis):
+    """First dim in ``dims`` divisible by ``parts`` gets the model axis."""
+    nd = len(shape)
+    for d in dims:
+        dd = d % nd
+        if shape[dd] % parts == 0 and shape[dd] >= parts:
+            spec = [None] * nd
+            spec[dd] = axis
+            return P(*spec)
+    return P()
+
+
+def role_pspec(role: str, shape, mesh) -> P:
+    parts = model_axis_size(mesh)
+    ax = "model"
+    if parts <= 1:
+        return P()
+    nd = len(shape)
+    if role == "embed":
+        return _try_dims(shape, (0, 1), parts, ax)
+    if role == "col":
+        return _try_dims(shape, (-1, -2), parts, ax)
+    if role == "row":
+        return _try_dims(shape, (-2, -1), parts, ax)
+    if role == "col_b":
+        return _try_dims(shape, (-1,), parts, ax)
+    if role == "expert_in":      # (L,E,D,ff): ff-parallel (shard_map MoE)
+        return _try_dims(shape, (-1,), parts, ax)
+    if role == "expert_down":    # (L,E,ff,D): ff is the contracting dim
+        return _try_dims(shape, (-2,), parts, ax)
+    if role == "expert":
+        return _try_dims(shape, (1, -1, -2), parts, ax)
+    return P()   # rep / rep_big
+
+
+def param_pspecs(cfg: ArchConfig, mesh):
+    return lm.map_defs(lambda d: role_pspec(d[1], d[0], mesh),
+                       lm.model_defs(cfg))
+
+
+def param_shardings(cfg: ArchConfig, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, mesh))
+
+
+def batch_pspec(mesh) -> P:
+    return P(data_axes(mesh))
+
+
+def batch_shardings(cfg: ArchConfig, specs, mesh):
+    """Inputs: batch dim over (pod, data); feature dims replicated."""
+    bd = data_axes(mesh)
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if s.shape[0] % max(1, _prod(mesh.shape[a] for a in bd)) == 0:
+            spec[0] = bd
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+def cache_shardings(cfg: ArchConfig, specs, mesh, *, shard_seq=False):
+    """KV caches: batch dim (index 1 after the layer stack dim) over
+    (pod,data); head dim over model where divisible.  ``shard_seq``:
+    context-parallel decode — shard the cache sequence dim over model
+    when heads aren't divisible (hillclimb option, EXPERIMENTS §Perf)."""
+    bd = data_axes(mesh)
+    dp = _prod(mesh.shape[a] for a in bd)
+    parts = model_axis_size(mesh)
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if len(s.shape) >= 2 and s.shape[1] % dp == 0:
+            spec[1] = bd
+        # (L, B, S, KV, hd): shard KV heads if divisible
+        if len(s.shape) == 5:
+            if s.shape[3] % parts == 0:
+                spec[3] = "model"
+            elif shard_seq and s.shape[2] % parts == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

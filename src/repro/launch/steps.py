@@ -1,0 +1,121 @@
+"""Jitted train / prefill / decode step builders with explicit shardings.
+
+``make_train_step`` = loss + grad + AdamW update (bf16 params, f32 opt
+state), batch sharded over (pod, data), params/opt over the TP rules.
+``make_decode_step`` = one serve token, cache donated (in-place update).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import lm, sharding_ctx
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from . import sharding as sh
+from .mesh import data_axes
+
+
+def opt_state_specs(cfg: ArchConfig):
+    p = lm.param_specs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, p), "v": jax.tree.map(f32, p),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _zero1_spec(pspec: P, shape, mesh):
+    """ZeRO-1: additionally shard optimizer state over the data axis on
+    the first still-unsharded, divisible dim."""
+    dsize = mesh.shape.get("data", 1)
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (s, cur) in enumerate(zip(shape, spec)):
+        if cur is None and s % dsize == 0 and s >= dsize:
+            spec[i] = "data"
+            return P(*spec)
+    return pspec
+
+
+def opt_state_shardings(cfg: ArchConfig, mesh, zero1: bool = False):
+    ps = sh.param_shardings(cfg, mesh)
+    if zero1:
+        pspecs = sh.param_pspecs(cfg, mesh)
+        specs = lm.map_defs(lambda d: d, lm.model_defs(cfg))
+        z = jax.tree.map(
+            lambda d, p: NamedSharding(mesh, _zero1_spec(p, d[0], mesh)),
+            specs, pspecs, is_leaf=lambda x: lm._is_shape_leaf(x))
+        ps = z
+    return {"m": ps, "v": ps, "step": sh.replicated(mesh)}
+
+
+def make_train_fn(cfg: ArchConfig, opt_cfg: AdamWConfig, mesh, *,
+                  chunk=1024):
+    bd = data_axes(mesh)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            b = {k: (jax.lax.with_sharding_constraint(
+                    v, NamedSharding(mesh, P(bd, *[None] * (v.ndim - 1))))
+                    if v.ndim >= 1 else v)
+                 for k, v in batch.items()}
+            return lm.train_loss(p, cfg, b, chunk=chunk)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def jit_train_step(cfg: ArchConfig, cell: ShapeCell, mesh, opt_cfg=None, *,
+                   chunk=1024, zero1: bool = False):
+    sharding_ctx.set_mesh(mesh)
+    opt_cfg = opt_cfg or AdamWConfig(lr=1e-4, grad_clip=1.0)
+    pshard = sh.param_shardings(cfg, mesh)
+    oshard = opt_state_shardings(cfg, mesh, zero1=zero1)
+    bshard = sh.batch_shardings(cfg, lm.input_specs(cfg, cell), mesh)
+    fn = make_train_fn(cfg, opt_cfg, mesh, chunk=chunk)
+    return jax.jit(
+        fn,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, sh.replicated(mesh)),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_prefill_fn(cfg: ArchConfig, *, chunk=1024):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, chunk=chunk)
+    return prefill_step
+
+
+def jit_prefill_step(cfg: ArchConfig, cell: ShapeCell, mesh, *, chunk=1024):
+    sharding_ctx.set_mesh(mesh)
+    pshard = sh.param_shardings(cfg, mesh)
+    bshard = sh.batch_shardings(cfg, lm.input_specs(cfg, cell), mesh)
+    return jax.jit(make_prefill_fn(cfg, chunk=chunk),
+                   in_shardings=(pshard, bshard))
+
+
+def make_decode_fn(cfg: ArchConfig):
+    def decode(params, token, cache, pos):
+        return lm.decode_step(params, cfg, token, cache, pos)
+    return decode
+
+
+def jit_decode_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                    shard_cache_seq: bool = False):
+    sharding_ctx.set_mesh(mesh)
+    pshard = sh.param_shardings(cfg, mesh)
+    cshard = sh.cache_shardings(cfg, lm.cache_specs(cfg, cell), mesh,
+                                shard_seq=shard_cache_seq)
+    tshard = sh.batch_shardings(
+        cfg, jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32), mesh)
+    return jax.jit(
+        make_decode_fn(cfg),
+        in_shardings=(pshard, tshard, cshard, sh.replicated(mesh)),
+        out_shardings=(None, cshard),
+        donate_argnums=(2,),
+    )

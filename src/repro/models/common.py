@@ -1,0 +1,198 @@
+"""Shared transformer building blocks (pure JAX, bf16-friendly)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38          # f32-safe mask value
+
+# Cost mode: the dry-run's roofline compiles set this so that layer/time
+# scans UNROLL — XLA's cost_analysis counts a while-loop body once
+# regardless of trip count, so per-layer cost is only measurable from
+# unrolled small-L variants (DESIGN.md §6).  Never on in real execution.
+_COST_MODE = [False]
+
+
+def set_cost_mode(on: bool):
+    _COST_MODE[0] = bool(on)
+
+
+def cost_mode() -> bool:
+    return _COST_MODE[0]
+
+
+def scan_layers(body, init, xs, length=None):
+    """lax.scan for layer/time stacks; unrolled in cost mode."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if cost_mode() else 1)
+
+
+# Perf options (EXPERIMENTS.md §Perf): paper-faithful/naive defaults; the
+# hillclimbed variants are switched on per-run by the launcher/dry-run so
+# baseline and optimized lowerings stay independently reproducible.
+PERF_DEFAULTS = {
+    "moe_dispatch": "global",      # global cumsum | "batched" shard-local
+    "ssm_scan_dtype": "float32",   # mamba recurrence precision
+    "remat_policy": "full",        # full recompute | "dots" save matmuls
+    "seq_parallel": False,         # Megatron SP residual activations
+    "bf16_norm_grad": False,       # bf16 dx cotangent through RMSNorm
+    "ssm_backend": "xla",          # mamba scan: xla assoc-scan | pallas
+}
+_PERF = dict(PERF_DEFAULTS)
+
+
+def set_perf_options(**kw):
+    for k, v in kw.items():
+        if k in _PERF and v is not None:
+            _PERF[k] = v
+
+
+def reset_perf_options():
+    _PERF.update(PERF_DEFAULTS)
+
+
+def perf_option(key: str):
+    return _PERF[key]
+
+
+def rms_norm(x, w, eps=1e-6, plus_one=False):
+    from .common import perf_option  # self-import safe at call time
+    if perf_option("bf16_norm_grad") and x.dtype == jnp.bfloat16:
+        return _rms_norm_bf16grad(x, w, eps, plus_one)
+    return _rms_norm_impl(x, w, eps, plus_one)
+
+
+def _rms_norm_impl(x, w, eps=1e-6, plus_one=False):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rms_norm_bf16grad(x, w, eps, plus_one):
+    """RMSNorm whose input cotangent is emitted in bf16 (§Perf: keeps the
+    tensor-parallel dx all-reduces in bf16 instead of the f32 that XLA
+    otherwise hoists across the norm's f32 compute region)."""
+    return _rms_norm_impl(x, w, eps, plus_one)
+
+
+def _rmsn_fwd(x, w, eps, plus_one):
+    return _rms_norm_impl(x, w, eps, plus_one), (x, w)
+
+
+def _rmsn_bwd(eps, plus_one, res, g):
+    x, w = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one \
+        else w.astype(jnp.float32)
+    gy = g32 * scale
+    d = x.shape[-1]
+    dx = inv * (gy - x32 * inv * inv
+                * jnp.mean(gy * x32, axis=-1, keepdims=True))
+    dw = jnp.sum(g32 * x32 * inv,
+                 axis=tuple(range(x.ndim - 1))).astype(w.dtype)
+    return dx.astype(x.dtype), dw
+
+
+_rms_norm_bf16grad.defvjp(_rmsn_fwd, _rmsn_bwd)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind="rmsnorm", plus_one=False):
+    if kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"], plus_one=plus_one)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_tables(positions, head_dim: int, fraction: float = 1.0,
+                base: float = 10000.0):
+    """cos/sin tables (..., rot_half) for neox-style rotate-half RoPE.
+    ``fraction < 1`` = partial rotary (chatglm3's 2d RoPE rotates half)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (base ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., rot/2)
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot: int):
+    """x (B, S, H, hd); cos/sin (B?, S, rot/2) broadcast over heads."""
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[..., None, :].astype(x.dtype)    # (B, S, 1, rot/2)
+    s = sin[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+# --------------------------------------------------------------- attention
+def gqa_attention(q, k, v, *, causal=True, window: int = 0,
+                  attn_softcap: float = 0.0, q_offset=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd). GQA via head-group reshape.
+
+    ``q_offset``: absolute position of q[0] (decode: Sk-1); default assumes
+    q and k start together (training/prefill).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / jnp.sqrt(
+        jnp.float32(hd)).astype(q.dtype)
+    if attn_softcap > 0:
+        scores = softcap(scores.astype(jnp.float32), attn_softcap)
+    scores = scores.astype(jnp.float32)
+    qpos = jnp.arange(Sq) + (q_offset if q_offset is not None else 0)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+# --------------------------------------------------------------------- MLP
+def gated_mlp(x, wg, wu, wd, act="silu"):
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    return (a(x @ wg) * (x @ wu)) @ wd
+
+
+def plain_mlp(x, w1, b1, w2, b2):
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2
+
+
+# -------------------------------------------------------------------- loss
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token CE. logits (B,S,V) any dtype → f32 reduction."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

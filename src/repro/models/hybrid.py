@@ -1,0 +1,159 @@
+"""Hymba-style hybrid layer: attention heads and a mamba SSM branch run in
+PARALLEL on the same normed input, outputs fused by learned per-branch
+gains (Hymba §2: "parallel attn+mamba heads"; meta-tokens omitted — noted
+in DESIGN.md).  The stack is heterogeneous: the first ``L - n_global``
+layers use sliding-window attention (ring-buffer KV at decode), the last
+``n_global_layers`` attend globally (full KV) — so ``long_500k`` decode
+holds O(window) state for most layers and is sub-quadratic end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import (apply_norm, apply_rope, gated_mlp, rope_tables,
+                     scan_layers, NEG_INF)
+from .ssm import mamba_branch, mamba_defs
+from .transformer import _attn_block, chunked_attention
+
+
+def _branch_defs(cfg: ArchConfig, L: int) -> dict:
+    D = cfg.d_model
+    sub = cfg.replace(n_layers=L)
+    defs = {
+        "ln1": {"w": ((L, D), "rep")},
+        "ln2": {"w": ((L, D), "rep")},
+        "wq": ((L, D, cfg.q_dim), "col"),
+        "wk": ((L, D, cfg.kv_dim), "col"),
+        "wv": ((L, D, cfg.kv_dim), "col"),
+        "wo": ((L, cfg.q_dim, D), "row"),
+        "attn_gain": ((L, D), "rep"),
+        "ssm_gain": ((L, D), "rep"),
+        "wg": ((L, D, cfg.d_ff), "col"),
+        "wu": ((L, D, cfg.d_ff), "col"),
+        "wd": ((L, cfg.d_ff, D), "row"),
+    }
+    defs.update(mamba_defs(sub))
+    return defs
+
+
+def hybrid_model_defs(cfg: ArchConfig) -> dict:
+    n_swa = cfg.n_layers - cfg.n_global_layers
+    return {
+        "embed": ((cfg.vocab_padded, cfg.d_model), "embed"),
+        "final_norm": {"w": ((cfg.d_model,), "rep")},
+        "layers": _branch_defs(cfg, n_swa),        # sliding-window stack
+        "glayers": _branch_defs(cfg, cfg.n_global_layers),
+    }
+
+
+def decode_attn(q, ck, cv, valid_upto):
+    """Ring/flat decode attention: all cache slots ≤ valid_upto are live
+    (slot order is irrelevant to the softmax sum)."""
+    B, _, H, hd = q.shape
+    Sk, KV = ck.shape[1], ck.shape[2]
+    if KV != H:
+        ck = jnp.repeat(ck, H // KV, axis=2)
+        cv = jnp.repeat(cv, H // KV, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, ck).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.arange(Sk) <= valid_upto
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, cv)
+
+
+def hybrid_layer(x, lp, cfg: ArchConfig, *, cos, sin, rot, window,
+                 cache=None, pos=None, write=None, chunk=1024):
+    """window=0 → global layer.  cache=(k,v,conv,ssm) → decode (S=1)."""
+    B, Sq, _ = x.shape
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+
+    from .sharding_ctx import constrain_attn_q, constrain_heads
+    q = constrain_attn_q(
+        (h @ lp["wq"]).reshape(B, Sq, cfg.n_heads, cfg.head_dim))
+    k = constrain_heads(
+        (h @ lp["wk"]).reshape(B, Sq, cfg.n_kv, cfg.head_dim))
+    v = constrain_heads(
+        (h @ lp["wv"]).reshape(B, Sq, cfg.n_kv, cfg.head_dim))
+    q = apply_rope(q, cos, sin, rot)
+    k = apply_rope(k, cos, sin, rot)
+    new_cache = None
+    if cache is not None:
+        ck, cv, conv_s, ssm_s = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, write, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, write, axis=1)
+        valid = jnp.minimum(pos, ck.shape[1] - 1)
+        attn = decode_attn(q, ck, cv, valid)
+    else:
+        attn = chunked_attention(q, k, v, causal=True, window=window,
+                                 attn_softcap=0.0, chunk=chunk)
+    attn = attn.reshape(B, Sq, cfg.q_dim) @ lp["wo"]
+
+    if cache is not None:
+        ssm, new_conv, new_ssm = mamba_branch(h, lp, cfg,
+                                              conv_state=conv_s,
+                                              ssm_state=ssm_s)
+        new_cache = (ck, cv, new_conv, new_ssm)
+    else:
+        ssm = mamba_branch(h, lp, cfg)
+
+    x = x + attn * lp["attn_gain"] + ssm * lp["ssm_gain"]
+    h2 = apply_norm(x, lp["ln2"], cfg.norm)
+    return x + gated_mlp(h2, lp["wg"], lp["wu"], lp["wd"], cfg.act), new_cache
+
+
+def _scan_stack(x, stack, cfg, *, cos, sin, rot, window, remat, chunk):
+    def body(xx, lp):
+        def blk(a, ll):
+            return hybrid_layer(a, ll, cfg, cos=cos, sin=sin, rot=rot,
+                                window=window, chunk=chunk)[0]
+        if remat:
+            blk = jax.checkpoint(blk)
+        return blk(xx, lp), None
+
+    x, _ = scan_layers(body, x, stack)
+    return x
+
+
+def hybrid_forward(params, cfg: ArchConfig, embeds, *, remat=True,
+                   chunk=1024):
+    S = embeds.shape[1]
+    cos, sin, rot = rope_tables(jnp.arange(S)[None, :], cfg.head_dim,
+                                cfg.rope_fraction, cfg.rope_base)
+    x = _scan_stack(embeds, params["layers"], cfg, cos=cos, sin=sin,
+                    rot=rot, window=cfg.sliding_window, remat=remat,
+                    chunk=chunk)
+    x = _scan_stack(x, params["glayers"], cfg, cos=cos, sin=sin, rot=rot,
+                    window=0, remat=remat, chunk=chunk)
+    return apply_norm(x, params["final_norm"], cfg.norm)
+
+
+def hybrid_decode_step(params, cfg: ArchConfig, token_embed, cache, pos):
+    """cache: SWA ring stacks ("k","v" (Lswa,B,window,KV,hd), "conv",
+    "ssm") + global stacks ("gk","gv" (Lg,B,S,KV,hd), "gconv","gssm")."""
+    cos, sin, rot = rope_tables(pos[None, None], cfg.head_dim,
+                                cfg.rope_fraction, cfg.rope_base)
+
+    def make_body(ring: bool):
+        def body(x, scanned):
+            lp, ck, cv, conv_s, ssm_s = scanned
+            write = pos % ck.shape[1] if ring else pos
+            y, nc = hybrid_layer(x, lp, cfg, cos=cos, sin=sin, rot=rot,
+                                 window=0, cache=(ck, cv, conv_s, ssm_s),
+                                 pos=pos, write=write)
+            return y, nc
+        return body
+
+    x, (nk, nv, nconv, nssm) = scan_layers(
+        make_body(True), token_embed,
+        (params["layers"], cache["k"], cache["v"], cache["conv"],
+         cache["ssm"]))
+    x, (gk, gv, gconv, gssm) = scan_layers(
+        make_body(False), x,
+        (params["glayers"], cache["gk"], cache["gv"], cache["gconv"],
+         cache["gssm"]))
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return x, {"k": nk, "v": nv, "conv": nconv, "ssm": nssm,
+               "gk": gk, "gv": gv, "gconv": gconv, "gssm": gssm}

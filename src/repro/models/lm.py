@@ -1,0 +1,259 @@
+"""Unified LM wrapper: one entry point per assigned architecture family.
+
+Provides, for every ``ArchConfig``:
+  * ``model_defs(cfg)``        — pytree of (shape, role) leaves;
+  * ``init_params(key, cfg)``  — materialized params (smoke tests);
+  * ``param_specs(cfg)``       — ShapeDtypeStructs (dry-run, no alloc);
+  * ``train_loss(params, cfg, batch)``;
+  * ``prefill(params, cfg, batch)``     → (logits_last, cache);
+  * ``decode_step(params, cfg, token, cache, pos)`` → (logits, cache);
+  * ``cache_specs(cfg, cell)`` / ``input_specs(cfg, cell)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from .common import apply_norm, scan_layers, softmax_xent
+from .hybrid import hybrid_decode_step, hybrid_forward, hybrid_model_defs
+from .ssm import rwkv_defs, rwkv_layer, RWKV_HEAD_DIM
+from .transformer import (chunked_xent, dense_decode_step, dense_forward,
+                          dense_model_defs, logits_for)
+from .whisper import (whisper_decode_step, whisper_decode_train,
+                      whisper_encode, whisper_model_defs)
+
+DTYPE = jnp.bfloat16
+
+
+# ------------------------------------------------------------- param defs
+def model_defs(cfg: ArchConfig) -> dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return dense_model_defs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid_model_defs(cfg)
+    if cfg.family == "ssm":
+        return {
+            "embed": ((cfg.vocab_padded, cfg.d_model), "embed"),
+            "ln0": {"w": ((cfg.d_model,), "rep"),
+                    "b": ((cfg.d_model,), "rep")},
+            "final_norm": {"w": ((cfg.d_model,), "rep"),
+                           "b": ((cfg.d_model,), "rep")},
+            "layers": rwkv_defs(cfg),
+        }
+    if cfg.family == "encdec":
+        return whisper_model_defs(cfg)
+    raise ValueError(cfg.family)
+
+
+def _is_shape_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+            and isinstance(x[1], str))
+
+
+def map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=_is_shape_leaf)
+
+
+def param_specs(cfg: ArchConfig, dtype=DTYPE):
+    return map_defs(lambda d: jax.ShapeDtypeStruct(d[0], dtype),
+                    model_defs(cfg))
+
+
+def init_params(key, cfg: ArchConfig, dtype=DTYPE):
+    """Materialize params (reduced configs only — full configs are dry-run
+    exercised via ShapeDtypeStructs)."""
+    defs = model_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_shape_leaf)
+    paths = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=_is_shape_leaf)[0]
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for (path, (shape, _)), k in zip(paths, keys):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append(_init_one(k, name, shape, dtype))
+    return treedef.unflatten(out)
+
+
+def _init_one(key, name, shape, dtype):
+    last = name.split("/")[-1]
+    if last in ("w",) or "gain" in last:          # norm scales / gains
+        return jnp.ones(shape, dtype)
+    if last == "a_log":                            # mamba A init
+        n = shape[-1]
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, shape).astype(jnp.float32)
+    if last in ("b", "mu", "cm_mu", "w_bias", "u_bonus", "d_skip",
+                "dt_b") or last.startswith("b"):
+        if last in ("mu", "cm_mu"):
+            return jnp.full(shape, 0.5, dtype)
+        if last == "w_bias":
+            return jnp.full(shape, -1.0, dtype)
+        return jnp.zeros(shape, dtype)
+    scale = 0.02
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- forward
+def _embed_tokens(params, cfg: ArchConfig, tokens):
+    x = params["embed"][tokens].astype(DTYPE)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def _rwkv_forward(params, cfg, embeds, remat=True):
+    x = apply_norm(embeds, params["ln0"], "layernorm")
+
+    def body(xx, lp):
+        def blk(a, ll):
+            return rwkv_layer(a, ll)[0]
+        if remat:
+            blk = jax.checkpoint(blk)
+        return blk(xx, lp), None
+
+    x, _ = scan_layers(body, x, params["layers"])
+    return apply_norm(x, params["final_norm"], "layernorm")
+
+
+def forward_hidden(params, cfg: ArchConfig, batch, *, remat=True,
+                   chunk=1024):
+    """→ final hidden states over the token positions that carry loss."""
+    if cfg.family in ("dense", "moe"):
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        return dense_forward(params, cfg, x, remat=remat, chunk=chunk)
+    if cfg.family == "vlm":
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        if cfg.n_patches and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(DTYPE), x], axis=1)
+            h = dense_forward(params, cfg, x, remat=remat, chunk=chunk)
+            return h[:, batch["patches"].shape[1]:]
+        return dense_forward(params, cfg, x, remat=remat, chunk=chunk)
+    if cfg.family == "hybrid":
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        return hybrid_forward(params, cfg, x, remat=remat, chunk=chunk)
+    if cfg.family == "ssm":
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        return _rwkv_forward(params, cfg, x, remat=remat)
+    if cfg.family == "encdec":
+        enc = whisper_encode(params, cfg, batch["frames"].astype(DTYPE),
+                             remat=remat, chunk=chunk)
+        return whisper_decode_train(params, cfg, batch["tokens"], enc,
+                                    remat=remat, chunk=chunk)
+    raise ValueError(cfg.family)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat=True, chunk=1024):
+    h = forward_hidden(params, cfg, batch, remat=remat, chunk=chunk)
+    lm_head = params.get("lm_head")
+    return chunked_xent(h, params["embed"], batch["labels"],
+                        logit_softcap=cfg.logit_softcap,
+                        lm_head=lm_head,
+                        valid_vocab=(cfg.vocab if cfg.vocab_padded
+                                     > cfg.vocab else None))
+
+
+# ---------------------------------------------------------------- serving
+def prefill(params, cfg: ArchConfig, batch, *, chunk=1024):
+    """Run the full prompt, return last-token logits (cache fill for the
+    attention families is exercised at decode; prefill lowers the full
+    forward — the compute-dominant phase)."""
+    h = forward_hidden(params, cfg, batch, remat=False, chunk=chunk)
+    return logits_for(h[:, -1:], params, cfg)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, pos):
+    """One serve step: (B,1) token + cache → (B,1,V) logits + new cache."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = _embed_tokens(params, cfg, token)
+        h, cache = dense_decode_step(params, cfg, x, cache, pos)
+    elif cfg.family == "hybrid":
+        x = _embed_tokens(params, cfg, token)
+        h, cache = hybrid_decode_step(params, cfg, x, cache, pos)
+    elif cfg.family == "ssm":
+        x = _embed_tokens(params, cfg, token)
+        x = apply_norm(x, params["ln0"], "layernorm")
+
+        def body(xx, scanned):
+            lp, l1, wkv, l2 = scanned
+            y, ns = rwkv_layer(xx, lp, states=(l1, wkv, l2))
+            return y, ns
+
+        h, (n1, nwkv, n2) = scan_layers(
+            body, x, (params["layers"], cache["last1"], cache["wkv"],
+                      cache["last2"]))
+        h = apply_norm(h, params["final_norm"], "layernorm")
+        cache = {"last1": n1, "wkv": nwkv, "last2": n2}
+    elif cfg.family == "encdec":
+        h, cache = whisper_decode_step(params, cfg, token, cache, pos)
+    else:
+        raise ValueError(cfg.family)
+    return logits_for(h, params, cfg), cache
+
+
+# ------------------------------------------------------------------ specs
+def cache_specs(cfg: ArchConfig, cell: ShapeCell, dtype=DTYPE):
+    B, S = cell.global_batch, cell.seq_len
+    L, KV, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": jax.ShapeDtypeStruct((L, B, S, KV, hd), dtype),
+                "v": jax.ShapeDtypeStruct((L, B, S, KV, hd), dtype)}
+    if cfg.family == "hybrid":
+        Lswa = L - cfg.n_global_layers
+        Lg = cfg.n_global_layers
+        W = min(cfg.sliding_window, S)
+        Di = cfg.ssm_expand * cfg.d_model
+        N = cfg.ssm_state
+        return {
+            "k": jax.ShapeDtypeStruct((Lswa, B, W, KV, hd), dtype),
+            "v": jax.ShapeDtypeStruct((Lswa, B, W, KV, hd), dtype),
+            "conv": jax.ShapeDtypeStruct((Lswa, B, 3, Di), dtype),
+            "ssm": jax.ShapeDtypeStruct((Lswa, B, Di, N), jnp.float32),
+            "gk": jax.ShapeDtypeStruct((Lg, B, S, KV, hd), dtype),
+            "gv": jax.ShapeDtypeStruct((Lg, B, S, KV, hd), dtype),
+            "gconv": jax.ShapeDtypeStruct((Lg, B, 3, Di), dtype),
+            "gssm": jax.ShapeDtypeStruct((Lg, B, Di, N), jnp.float32),
+        }
+    if cfg.family == "ssm":
+        H = cfg.d_model // RWKV_HEAD_DIM
+        return {
+            "last1": jax.ShapeDtypeStruct((L, B, 1, cfg.d_model), dtype),
+            "wkv": jax.ShapeDtypeStruct(
+                (L, B, H, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32),
+            "last2": jax.ShapeDtypeStruct((L, B, 1, cfg.d_model), dtype),
+        }
+    if cfg.family == "encdec":
+        return {"k": jax.ShapeDtypeStruct((L, B, S, KV, hd), dtype),
+                "v": jax.ShapeDtypeStruct((L, B, S, KV, hd), dtype),
+                "xk": jax.ShapeDtypeStruct((L, B, S, KV, hd), dtype),
+                "xv": jax.ShapeDtypeStruct((L, B, S, KV, hd), dtype)}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, cell: ShapeCell, dtype=DTYPE):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, cell, dtype))
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "encdec":
+        St = max(128, S // 4)
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), DTYPE),
+                "tokens": jax.ShapeDtypeStruct((B, St), i32),
+                "labels": jax.ShapeDtypeStruct((B, St), i32)}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        return {"patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), DTYPE),
+                "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+                "labels": jax.ShapeDtypeStruct((B, S - P), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32)}

@@ -1,0 +1,97 @@
+"""Mesh context for in-model sharding constraints.
+
+Model code is mesh-agnostic; the launcher registers the active mesh here
+before tracing, and layers call ``constrain_*`` to pin the Megatron
+pattern (batch over (pod,data), heads over model) instead of leaving GSPMD
+to guess.  With no mesh registered (CPU smoke tests) these are no-ops.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def _batch_axes():
+    return tuple(a for a in _MESH.axis_names if a in ("pod", "data"))
+
+
+def constrain(x, spec):
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_hidden(x):
+    """(B, S, D) — batch over data axes.  With the ``seq_parallel`` perf
+    option on (§Perf), residual activations between blocks are ALSO
+    sharded along sequence over model (Megatron SP): the TP all-reduce
+    pair becomes all-gather(bf16) + reduce-scatter, and the f32 norms
+    compute on 1/16 of the tokens."""
+    if _MESH is None:
+        return x
+    from .common import perf_option
+    parts = _MESH.shape.get("model", 1)
+    if (perf_option("seq_parallel") and x.ndim == 3 and parts > 1
+            and x.shape[1] % parts == 0 and x.shape[1] >= parts):
+        return constrain(x, P(_batch_axes(), "model", None))
+    return constrain(x, P(_batch_axes(), *[None] * (x.ndim - 1)))
+
+
+def constrain_heads(x):
+    """(B, S, H, hd) — shard heads over model when divisible."""
+    if _MESH is None:
+        return x
+    parts = _MESH.shape.get("model", 1)
+    if x.ndim == 4 and x.shape[2] % parts == 0 and x.shape[2] >= parts:
+        return constrain(x, P(_batch_axes(), None, "model", None))
+    return constrain(x, P(_batch_axes(), None, None, None))
+
+
+def constrain_attn_q(x):
+    """Query tensor: head-sharded when divisible; otherwise SEQUENCE-
+    sharded over model (context parallelism — odd-head archs like
+    granite-3b 24H / hymba 25H / whisper 6H would otherwise replicate the
+    full f32 score tensor on every device; §Perf iteration 5)."""
+    if _MESH is None:
+        return x
+    parts = _MESH.shape.get("model", 1)
+    if x.ndim == 4 and x.shape[2] % parts == 0 and x.shape[2] >= parts:
+        return constrain(x, P(_batch_axes(), None, "model", None))
+    if x.ndim == 4 and x.shape[1] % parts == 0 and x.shape[1] >= parts:
+        return constrain(x, P(_batch_axes(), "model", None, None))
+    return constrain(x, P(_batch_axes(), None, None, None))
+
+
+def constrain_ff(x):
+    """(B, S, FF) — shard the expanded feature dim over model."""
+    if _MESH is None:
+        return x
+    parts = _MESH.shape.get("model", 1)
+    if x.shape[-1] % parts == 0:
+        return constrain(x, P(_batch_axes(), None, "model"))
+    return x
+
+
+def constrain_moe_buf(buf):
+    """(B, E, cap, D) dispatch buffer: batch over data axes; experts over
+    model when divisible, else capacity slots over model (granite-3b's
+    40 experts don't divide 16)."""
+    if _MESH is None:
+        return buf
+    # batch-sharded ONLY: the scatter/gather around the buffer then stay
+    # entirely on-device; the expert einsums pick up model-parallelism
+    # from the ff-sharded expert weights (measured in EXPERIMENTS §Perf —
+    # cap-sharding the buffer made the dispatch scatter cross-shard and
+    # DOUBLED collective time).
+    return constrain(buf, P(_batch_axes(), None, None, None))

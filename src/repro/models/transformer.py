@@ -1,0 +1,412 @@
+"""Decoder-only transformer families: dense GQA (qwen2/qwen1.5/chatglm3/
+mistral-llava), gemma2 (alternating local/global + softcaps + post-norms),
+and granite-style MoE.  Stacked-parameter layout, ``lax.scan`` over layers,
+query-chunked attention and sequence-chunked cross-entropy so 32k-sequence
+cells fit per-device memory at lowering time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import (apply_norm, apply_rope, gated_mlp, gqa_attention,
+                     rope_tables, scan_layers, softcap, NEG_INF)
+from .sharding_ctx import constrain_attn_q, constrain_heads, constrain_hidden
+
+Pytree = Any
+
+
+# ----------------------------------------------------------- param defs
+def dense_layer_defs(cfg: ArchConfig) -> dict:
+    """(shape, role) per stacked layer tensor. Roles map to PartitionSpecs
+    in launch/sharding.py."""
+    L, D = cfg.n_layers, cfg.d_model
+    qd, kvd, ff = cfg.q_dim, cfg.kv_dim, cfg.d_ff
+    defs = {
+        "ln1": {"w": ((L, D), "rep")},
+        "ln2": {"w": ((L, D), "rep")},
+        "wq": ((L, D, qd), "col"),
+        "wk": ((L, D, kvd), "col"),
+        "wv": ((L, D, kvd), "col"),
+        "wo": ((L, qd, D), "row"),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ((L, qd), "col_b")
+        defs["bk"] = ((L, kvd), "col_b")
+        defs["bv"] = ((L, kvd), "col_b")
+    if cfg.n_experts:
+        eff = cfg.expert_d_ff
+        defs["router"] = ((L, D, cfg.n_experts), "rep")
+        defs["ewg"] = ((L, cfg.n_experts, D, eff), "expert_in")
+        defs["ewu"] = ((L, cfg.n_experts, D, eff), "expert_in")
+        defs["ewd"] = ((L, cfg.n_experts, eff, D), "expert_down")
+    else:
+        defs["wg"] = ((L, D, ff), "col")
+        defs["wu"] = ((L, D, ff), "col")
+        defs["wd"] = ((L, ff, D), "row")
+    if cfg.post_block_norm:
+        defs["ln1_post"] = {"w": ((L, D), "rep")}
+        defs["ln2_post"] = {"w": ((L, D), "rep")}
+    if cfg.norm == "layernorm":
+        for k in ("ln1", "ln2", "ln1_post", "ln2_post"):
+            if k in defs:
+                defs[k]["b"] = (defs[k]["w"][0], "rep")
+    return defs
+
+
+def dense_model_defs(cfg: ArchConfig) -> dict:
+    defs = {
+        "embed": ((cfg.vocab_padded, cfg.d_model), "embed"),
+        "final_norm": {"w": ((cfg.d_model,), "rep")},
+        "layers": dense_layer_defs(cfg),
+    }
+    if cfg.norm == "layernorm":
+        defs["final_norm"]["b"] = ((cfg.d_model,), "rep")
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ((cfg.d_model, cfg.vocab_padded), "col")
+    return defs
+
+
+# ------------------------------------------------------- chunked attention
+def chunked_attention(q, k, v, *, causal=True, window=0, attn_softcap=0.0,
+                      local_flag=None, q_offset=0, chunk=1024):
+    """Query-chunked GQA attention: full K/V per chunk, bounded score
+    memory.  ``local_flag`` (traced bool) toggles the sliding window at
+    runtime (gemma2 alternation inside one scanned layer body)."""
+    B, Sq, H, hd = q.shape
+    if Sq <= chunk:
+        return _attn_block(q, k, v, causal=causal, window=window,
+                           attn_softcap=attn_softcap, local_flag=local_flag,
+                           q_offset=q_offset)
+    assert Sq % chunk == 0
+    nq = Sq // chunk
+    qs = q.reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        out = _attn_block(qc, k, v, causal=causal, window=window,
+                          attn_softcap=attn_softcap, local_flag=local_flag,
+                          q_offset=q_offset + i * chunk)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _attn_block(q, k, v, *, causal, window, attn_softcap, local_flag,
+                q_offset):
+    """GQA via repeat-KV: K/V broadcast to H heads so scores shard
+    cleanly over the (divisible) q-head dim — the reshape-to-groups form
+    broke GSPMD head sharding and replicated the score tensor."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        k = constrain_heads(jnp.repeat(k, H // KV, axis=2))
+        v = constrain_heads(jnp.repeat(v, H // KV, axis=2))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if attn_softcap > 0:
+        scores = softcap(scores, attn_softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        wmask = kpos[None, :] > qpos[:, None] - window
+        if local_flag is not None:
+            wmask = wmask | ~local_flag
+        mask &= wmask
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ------------------------------------------------------------------- MoE
+def moe_ffn(x, router_w, ewg, ewu, ewd, *, top_k: int, act: str,
+            capacity_factor: float = 1.25, dispatch: str | None = None):
+    """Scatter-based top-k dispatch with fixed expert capacity (static
+    shapes → no data-dependent recompiles; drops overflow tokens like
+    production MoE runtimes — the straggler-mitigation choice).
+
+    dispatch="global" (baseline): one queue over ALL tokens — a direct
+    GPU-style port whose rank cumsum runs over the global token axis and
+    therefore cannot shard (EXPERIMENTS §Perf baseline).
+    dispatch="batched" (optimized): per-sequence queues — the PCSR
+    S=True idea (fixed-capacity balanced chunks) applied to routing: the
+    cumsum/scatter/gather all carry the batch dim, so the whole dispatch
+    pipeline shards over (pod, data) with zero extra collectives."""
+    from .common import perf_option
+    dispatch = dispatch or perf_option("moe_dispatch")
+    if dispatch == "batched":
+        return _moe_ffn_batched(x, router_w, ewg, ewu, ewd, top_k=top_k,
+                                act=act, capacity_factor=capacity_factor)
+    if dispatch == "shard_map":
+        return _moe_ffn_shard_map(x, router_w, ewg, ewu, ewd, top_k=top_k,
+                                  act=act, capacity_factor=capacity_factor)
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt @ router_w.astype(x.dtype)).astype(jnp.float32)
+    gates, eidx = jax.lax.top_k(logits, top_k)              # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1).astype(x.dtype)
+    cap = max(8, int(capacity_factor * top_k * T / E))
+    # position of each (token, slot) within its expert queue
+    onehot_flat = eidx.reshape(-1)                          # (T*k,)
+    pos = _positions_in_expert(onehot_flat, E)              # (T*k,)
+    keep = (pos < cap).astype(x.dtype)
+    # dispatch: (E, cap, D) scatter-add
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    xrep = jnp.repeat(xt, top_k, axis=0)                    # (T*k, D)
+    buf = buf.at[onehot_flat, jnp.minimum(pos, cap - 1)].add(
+        xrep * keep[:, None])
+    # expert FFN, batched over E
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = jnp.einsum("ecd,edf->ecf", buf, ewg.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, ewu.astype(x.dtype))
+    y = jnp.einsum("ecf,efd->ecd", a(h) * u, ewd.astype(x.dtype))
+    # combine: gather back and weight by gate
+    out = y[onehot_flat, jnp.minimum(pos, cap - 1)] * (gates.reshape(-1)
+                                                       * keep)[:, None]
+    return out.reshape(T, top_k, D).sum(1).reshape(B, S, D)
+
+
+def _moe_ffn_batched(x, router_w, ewg, ewu, ewd, *, top_k: int, act: str,
+                     capacity_factor: float, constrain: bool = True):
+    """Shard-local dispatch: every tensor keeps the batch dim, so GSPMD
+    keeps the one-hot rank cumsum, scatter and gather on-device."""
+    from .sharding_ctx import constrain_moe_buf
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    k = top_k
+    logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)  # (B,S,E)
+    gates, eidx = jax.lax.top_k(logits, k)                       # (B,S,k)
+    gates = jax.nn.softmax(gates, axis=-1).astype(x.dtype)
+    cap = max(8, -(-int(capacity_factor * k * S / E) // 16) * 16)
+    eflat = eidx.reshape(B, S * k)
+    onehot = jax.nn.one_hot(eflat, E, dtype=jnp.int32)           # (B,S·k,E)
+    ranks = jnp.cumsum(onehot, axis=1) - onehot                  # per-seq
+    pos = jnp.take_along_axis(ranks, eflat[..., None],
+                              axis=2)[..., 0]                    # (B,S·k)
+    keep = (pos < cap).astype(x.dtype)
+    pos_c = jnp.minimum(pos, cap - 1)
+    b_ix = jnp.broadcast_to(jnp.arange(B)[:, None], eflat.shape)
+    # gather-based dispatch (§Perf iteration 4): scatter only the int32
+    # token-id map, then GATHER activations into the expert buffer —
+    # avoids materializing x repeated k× and the read-modify-write
+    # scatter-add of the (B,E,cap,D) buffer.
+    tok_src = jnp.broadcast_to(jnp.arange(S * k, dtype=jnp.int32) // k,
+                               eflat.shape)
+    tokmap = jnp.zeros((B, E, cap), jnp.int32)
+    tokmap = tokmap.at[b_ix, eflat, pos_c].set(tok_src)
+    valid = jnp.zeros((B, E, cap), x.dtype)
+    valid = valid.at[b_ix, eflat, pos_c].max(keep)
+    buf = jnp.take_along_axis(
+        x[:, None], tokmap.reshape(B, 1, E * cap)[..., None], axis=2
+    ).reshape(B, E, cap, D) * valid[..., None]
+    if constrain:
+        buf = constrain_moe_buf(buf)
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    # fused gate|up projection: one read of the buffer instead of two
+    hu = jnp.einsum("becd,edf->becf", buf,
+                    jnp.concatenate([ewg, ewu], -1).astype(x.dtype))
+    ff = ewg.shape[-1]
+    y = jnp.einsum("becf,efd->becd", a(hu[..., :ff]) * hu[..., ff:],
+                   ewd.astype(x.dtype))
+    out = y[b_ix, eflat, pos_c] * (gates.reshape(B, S * k)
+                                   * keep)[..., None]
+    return out.reshape(B, S, k, D).sum(2)
+
+
+def _moe_ffn_shard_map(x, router_w, ewg, ewu, ewd, *, top_k: int, act: str,
+                       capacity_factor: float):
+    """Explicit-collective MoE (the hillclimbed variant, §Perf): batch
+    shards over (pod, data), expert ff over model.  Dispatch, expert
+    matmuls and combine are all LOCAL; the combine is linear in the
+    down-projection partial sums, so the ONLY collective is one psum of
+    the (B,S,D) layer output — versus per-(E,cap) all-gathers/reduces
+    when GSPMD is left to place them."""
+    from jax.sharding import PartitionSpec as P
+    from .sharding_ctx import get_mesh
+    mesh = get_mesh()
+    parts = mesh.shape.get("model", 1) if mesh is not None else 1
+    ff = ewg.shape[-1]
+    if mesh is None or parts <= 1 or ff % parts:
+        return _moe_ffn_batched(x, router_w, ewg, ewu, ewd, top_k=top_k,
+                                act=act, capacity_factor=capacity_factor)
+    bd = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def local_fn(xl, rw, g, u, d):
+        y_partial = _moe_ffn_batched(xl, rw, g, u, d, top_k=top_k, act=act,
+                                     capacity_factor=capacity_factor,
+                                     constrain=False)
+        return jax.lax.psum(y_partial, "model")
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(bd, None, None), P(),
+                  P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None)),
+        out_specs=P(bd, None, None),
+        check_vma=False,
+    )(x, router_w, ewg, ewu, ewd)
+
+
+def _positions_in_expert(eidx_flat, E: int):
+    """Rank of each entry within its expert (cumulative count)."""
+    Tk = eidx_flat.shape[0]
+    onehot = jax.nn.one_hot(eidx_flat, E, dtype=jnp.int32)   # (T·k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(ranks, eidx_flat[:, None], axis=1)[:, 0]
+
+
+# ------------------------------------------------------------ layer body
+def dense_layer(x, lp, cfg: ArchConfig, *, cos, sin, rot, layer_idx,
+                cache=None, pos=None, chunk=1024):
+    """One transformer block. cache=(k,v) (B,Smax,KV,hd) → decode mode,
+    returns (x, new_cache)."""
+    B, Sq, D = x.shape
+    h = apply_norm(x, lp["ln1"], cfg.norm, cfg.norm_plus_one)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = constrain_attn_q(q.reshape(B, Sq, cfg.n_heads, cfg.head_dim))
+    k = constrain_heads(k.reshape(B, Sq, cfg.n_kv, cfg.head_dim))
+    v = constrain_heads(v.reshape(B, Sq, cfg.n_kv, cfg.head_dim))
+    q = apply_rope(q, cos, sin, rot)
+    k = apply_rope(k, cos, sin, rot)
+
+    local_flag = None
+    window = cfg.sliding_window
+    if cfg.alternate_local_global and window > 0:
+        local_flag = (layer_idx % 2 == 0)         # even layers local
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, pos, axis=1)
+        new_cache = (ck, cv)
+        attn = _attn_block(q, ck, cv, causal=True, window=window,
+                           attn_softcap=cfg.attn_softcap,
+                           local_flag=local_flag, q_offset=pos)
+    else:
+        attn = chunked_attention(q, k, v, causal=True, window=window,
+                                 attn_softcap=cfg.attn_softcap,
+                                 local_flag=local_flag, chunk=chunk)
+    attn = constrain_heads(attn).reshape(B, Sq, cfg.q_dim) @ lp["wo"]
+    if cfg.post_block_norm:
+        attn = apply_norm(attn, lp["ln1_post"], cfg.norm, cfg.norm_plus_one)
+    x = constrain_hidden(x + attn)
+
+    h = apply_norm(x, lp["ln2"], cfg.norm, cfg.norm_plus_one)
+    if cfg.n_experts:
+        f = moe_ffn(h, lp["router"], lp["ewg"], lp["ewu"], lp["ewd"],
+                    top_k=cfg.top_k, act=cfg.act)
+    else:
+        f = gated_mlp(h, lp["wg"], lp["wu"], lp["wd"], act=cfg.act)
+    if cfg.post_block_norm:
+        f = apply_norm(f, lp["ln2_post"], cfg.norm, cfg.norm_plus_one)
+    return constrain_hidden(x + f), new_cache
+
+
+# --------------------------------------------------------------- forward
+def dense_forward(params, cfg: ArchConfig, embeds, *, remat=True,
+                  chunk=1024):
+    """embeds (B,S,D) → final hidden states (B,S,D); scan over layers."""
+    B, S, D = embeds.shape
+    positions = jnp.arange(S)[None, :]
+    cos, sin, rot = rope_tables(positions, cfg.head_dim, cfg.rope_fraction,
+                                cfg.rope_base)
+
+    def body(x, scanned):
+        lp, idx = scanned
+        fn = functools.partial(dense_layer, cfg=cfg, cos=cos, sin=sin,
+                               rot=rot, chunk=chunk)
+        if remat:
+            from .common import perf_option
+            policy = {
+                "dots": jax.checkpoint_policies.dots_saveable,
+                "dots_nb":
+                    jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            }.get(perf_option("remat_policy"))
+            fn = jax.checkpoint(lambda xx, ll, ii: dense_layer(
+                xx, ll, cfg, cos=cos, sin=sin, rot=rot, layer_idx=ii,
+                chunk=chunk)[0], policy=policy)
+            return fn(x, lp, idx), None
+        return fn(x, lp, layer_idx=idx)[0], None
+
+    x, _ = scan_layers(body, embeds,
+                        (params["layers"], jnp.arange(cfg.n_layers)))
+    return apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_plus_one)
+
+
+def dense_decode_step(params, cfg: ArchConfig, token_embed, cache, pos):
+    """token_embed (B,1,D); cache {"k","v"}: (L,B,Smax,KV,hd).
+    Returns (hidden (B,1,D), new cache)."""
+    cos, sin, rot = rope_tables(pos[None, None], cfg.head_dim,
+                                cfg.rope_fraction, cfg.rope_base)
+
+    def body(x, scanned):
+        lp, ck, cv, idx = scanned
+        y, (nk, nv) = dense_layer(x, lp, cfg, cos=cos, sin=sin, rot=rot,
+                                  layer_idx=idx, cache=(ck, cv), pos=pos)
+        return y, (nk, nv)
+
+    x, (nk, nv) = scan_layers(
+        body, token_embed,
+        (params["layers"], cache["k"], cache["v"], jnp.arange(cfg.n_layers)))
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_plus_one)
+    return x, {"k": nk, "v": nv}
+
+
+# ------------------------------------------------------------------ loss
+def chunked_xent(x, embed, labels, *, logit_softcap=0.0, chunk=512,
+                 lm_head=None, valid_vocab=None):
+    """Sequence-chunked CE against (tied or untied) unembedding — the full
+    (B,S,V) logits tensor is never materialized, and the label term is a
+    one-hot contraction (a reduction over the vocab-parallel dim → cheap
+    partial-sum all-reduce) rather than a gather (which would all-gather
+    the sharded logits)."""
+    B, S, D = x.shape
+    W = embed.T if lm_head is None else lm_head        # (D, V)
+    V = W.shape[-1]
+    nc = max(1, S // chunk)
+    while S % nc:                     # largest divisor ≤ target count
+        nc -= 1
+    chunk = S // nc
+    xs = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xl):
+        xc, lc = xl
+        logits = (xc @ W.astype(xc.dtype)).astype(jnp.float32)
+        if logit_softcap > 0:
+            logits = softcap(logits, logit_softcap)
+        if valid_vocab is not None and valid_vocab < V:
+            logits = jnp.where(jnp.arange(V) < valid_vocab, logits, NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, V, dtype=logits.dtype)
+        ll = (logits * onehot).sum(-1)
+        return carry + (lse - ll).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (B * S)
+
+
+def logits_for(x, params, cfg: ArchConfig):
+    W = params.get("lm_head")
+    W = params["embed"].T if W is None else W
+    logits = (x @ W.astype(x.dtype)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = softcap(logits, cfg.logit_softcap)
+    if cfg.vocab_padded > cfg.vocab:       # mask Megatron vocab padding
+        logits = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab,
+                           logits, NEG_INF)
+    return logits

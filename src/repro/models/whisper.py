@@ -1,0 +1,158 @@
+"""Whisper-tiny backbone: encoder-decoder transformer with layernorm,
+learned positional embeddings, GELU MLPs, and decoder cross-attention.
+The conv audio frontend is a STUB per the assignment — ``input_specs()``
+supplies precomputed frame embeddings (B, S_audio, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import apply_norm, plain_mlp, scan_layers, NEG_INF
+from .transformer import _attn_block, chunked_attention
+
+MAX_POS = 65536          # learned positional table size (structural)
+
+
+def _attn_defs(L, D, qd, kvd, prefix=""):
+    return {
+        f"{prefix}wq": ((L, D, qd), "col"),
+        f"{prefix}wk": ((L, D, kvd), "col"),
+        f"{prefix}wv": ((L, D, kvd), "col"),
+        f"{prefix}wo": ((L, qd, D), "row"),
+        f"{prefix}bq": ((L, qd), "col_b"),
+        f"{prefix}bv": ((L, kvd), "col_b"),
+        f"{prefix}bo": ((L, D), "rep"),
+    }
+
+
+def _ln(L, D):
+    return {"w": ((L, D), "rep"), "b": ((L, D), "rep")}
+
+
+def whisper_model_defs(cfg: ArchConfig) -> dict:
+    D, qd, kvd, FF = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    enc = {"ln1": _ln(Le, D), "ln2": _ln(Le, D),
+           "w1": ((Le, D, FF), "col"), "b1": ((Le, FF), "col_b"),
+           "w2": ((Le, FF, D), "row"), "b2": ((Le, D), "rep")}
+    enc.update(_attn_defs(Le, D, qd, kvd))
+    dec = {"ln1": _ln(Ld, D), "ln2": _ln(Ld, D), "ln3": _ln(Ld, D),
+           "w1": ((Ld, D, FF), "col"), "b1": ((Ld, FF), "col_b"),
+           "w2": ((Ld, FF, D), "row"), "b2": ((Ld, D), "rep")}
+    dec.update(_attn_defs(Ld, D, qd, kvd))
+    dec.update(_attn_defs(Ld, D, qd, kvd, prefix="x"))     # cross-attn
+    return {
+        "embed": ((cfg.vocab_padded, D), "embed"),
+        "pos_enc": ((MAX_POS, D), "rep_big"),
+        "pos_dec": ((MAX_POS, D), "rep_big"),
+        "enc_final": _ln(1, D),
+        "dec_final": _ln(1, D),
+        "enc": enc,
+        "dec": dec,
+    }
+
+
+def _mha(h, lp, prefix, cfg, *, kv_src=None, causal, cache=None, pos=None,
+         chunk=1024):
+    """Self- or cross-attention with biases (whisper has q/v/o biases)."""
+    B, Sq, D = h.shape
+    src = h if kv_src is None else kv_src
+    q = (h @ lp[f"{prefix}wq"] + lp[f"{prefix}bq"]).reshape(
+        B, Sq, cfg.n_heads, cfg.head_dim)
+    k = (src @ lp[f"{prefix}wk"]).reshape(B, -1, cfg.n_kv, cfg.head_dim)
+    v = (src @ lp[f"{prefix}wv"] + lp[f"{prefix}bv"]).reshape(
+        B, -1, cfg.n_kv, cfg.head_dim)
+    new_cache = None
+    if cache is not None:                        # decode self-attn
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, pos, axis=1)
+        new_cache = (ck, cv)
+        out = _attn_block(q, ck, cv, causal=True, window=0,
+                          attn_softcap=0.0, local_flag=None, q_offset=pos)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=0,
+                                attn_softcap=0.0, chunk=chunk)
+    out = out.reshape(B, Sq, cfg.q_dim)
+    return out @ lp[f"{prefix}wo"] + lp[f"{prefix}bo"], new_cache
+
+
+def whisper_encode(params, cfg: ArchConfig, frames, *, remat=True,
+                   chunk=1024):
+    """frames (B, Sa, D) stub embeddings → encoder states."""
+    Sa = frames.shape[1]
+    x = frames + params["pos_enc"][:Sa][None]
+
+    def body(xx, lp):
+        def blk(a, ll):
+            h, _ = _mha(apply_norm(a, ll["ln1"], "layernorm"), ll, "", cfg,
+                        causal=False, chunk=chunk)
+            a = a + h
+            m = plain_mlp(apply_norm(a, ll["ln2"], "layernorm"),
+                          ll["w1"], ll["b1"], ll["w2"], ll["b2"])
+            return a + m
+        if remat:
+            blk = jax.checkpoint(blk)
+        return blk(xx, lp), None
+
+    x, _ = scan_layers(body, x, params["enc"])
+    f = {"w": params["enc_final"]["w"][0], "b": params["enc_final"]["b"][0]}
+    return apply_norm(x, f, "layernorm")
+
+
+def whisper_decode_train(params, cfg: ArchConfig, tokens, enc_states, *,
+                         remat=True, chunk=1024):
+    St = tokens.shape[1]
+    x = params["embed"][tokens] + params["pos_dec"][:St][None]
+
+    def body(xx, lp):
+        def blk(a, ll):
+            h, _ = _mha(apply_norm(a, ll["ln1"], "layernorm"), ll, "", cfg,
+                        causal=True, chunk=chunk)
+            a = a + h
+            h, _ = _mha(apply_norm(a, ll["ln2"], "layernorm"), ll, "x", cfg,
+                        kv_src=enc_states, causal=False, chunk=chunk)
+            a = a + h
+            m = plain_mlp(apply_norm(a, ll["ln3"], "layernorm"),
+                          ll["w1"], ll["b1"], ll["w2"], ll["b2"])
+            return a + m
+        if remat:
+            blk = jax.checkpoint(blk)
+        return blk(xx, lp), None
+
+    x, _ = scan_layers(body, x, params["dec"])
+    f = {"w": params["dec_final"]["w"][0], "b": params["dec_final"]["b"][0]}
+    return apply_norm(x, f, "layernorm")
+
+
+def whisper_decode_step(params, cfg: ArchConfig, token, cache, pos):
+    """One decoder token. cache: {"k","v" (Ld,B,St,KV,hd) self-attn,
+    "xk","xv" (Ld,B,Sa,KV,hd) precomputed cross-attn K/V}."""
+    x = params["embed"][token] + params["pos_dec"][pos][None, None]
+
+    def body(xx, scanned):
+        lp, ck, cv, xk, xv = scanned
+        h, (nk, nv) = _mha(apply_norm(xx, lp["ln1"], "layernorm"), lp, "",
+                           cfg, causal=True, cache=(ck, cv), pos=pos)
+        xx = xx + h
+        # cross-attn against precomputed encoder K/V (all positions valid)
+        B = xx.shape[0]
+        q = (apply_norm(xx, lp["ln2"], "layernorm") @ lp["xwq"]
+             + lp["xbq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        from .hybrid import decode_attn
+        h = decode_attn(q, xk, xv, jnp.int32(xk.shape[1] - 1))
+        h = h.reshape(B, 1, cfg.q_dim) @ lp["xwo"] + lp["xbo"]
+        xx = xx + h
+        m = plain_mlp(apply_norm(xx, lp["ln3"], "layernorm"),
+                      lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        return xx + m, (nk, nv)
+
+    x, (nk, nv) = scan_layers(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    f = {"w": params["dec_final"]["w"][0], "b": params["dec_final"]["b"][0]}
+    return apply_norm(x, f, "layernorm"), {"k": nk, "v": nv,
+                                           "xk": cache["xk"],
+                                           "xv": cache["xv"]}

@@ -1,0 +1,2 @@
+from .adamw import adamw_init, adamw_update, AdamWConfig
+from .compression import topk_compress_init, topk_compress_apply

@@ -1,0 +1,39 @@
+"""Gradient compression for cross-pod data parallelism: top-k
+sparsification with error feedback (memory), the standard trick for
+bandwidth-bound DP all-reduce at 1000+-node scale.
+
+Compression happens *before* the cross-pod reduction: each replica keeps
+the residual locally so the update stays unbiased in the long run.  Used
+as an opt-in wrapper around the optimizer (``launch/train.py --compress``);
+tests check convergence-neutrality on small runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_mask(x, frac: float):
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_compress_apply(grads, error, frac: float = 0.05):
+    """Returns (compressed grads to all-reduce, new error memory)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        mask = _topk_mask(g32, frac)
+        sent = g32 * mask
+        return sent.astype(g.dtype), g32 - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

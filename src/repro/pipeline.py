@@ -1,0 +1,71 @@
+"""The ParamSpMM three-phase workflow (paper Fig. 2):
+configuration prediction → PCSR generation → computing engine.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .core.decider import SpMMDecider
+from .core.engine import ParamSpMMOperator
+from .core.features import extract_features
+from .core.cost_model import CostModel
+from .core.pcsr import SpMMConfig, config_space
+from .core.reorder import rabbit_reorder, apply_reorder
+from .core.sparse import CSRMatrix
+
+
+class ParamSpMM:
+    """End-to-end adaptive SpMM for one sparse matrix and embedding dim.
+
+    config resolution order: explicit ``config`` > ``decider`` prediction >
+    cost-model oracle search (the fallback when no trained decider is at
+    hand — e.g. first-run autotuning).
+    """
+
+    def __init__(self, csr: CSRMatrix, dim: int, *,
+                 config: Optional[SpMMConfig] = None,
+                 decider: Optional[SpMMDecider] = None,
+                 reorder: bool = True,
+                 backend: str = "engine",
+                 interpret: bool = True,
+                 build_transpose: bool = True,
+                 select: str = "model"):
+        self.perm = None
+        if reorder:                       # paper §4.4: default preprocessing
+            perm = rabbit_reorder(csr)
+            cand = apply_reorder(csr, perm)
+            # keep whichever ordering has better V=2 locality — reordering
+            # an already well-ordered graph (e.g. co-citation clones) can
+            # only hurt, and the metric is cheap (pcsr_stats)
+            from .core.pcsr import pcsr_stats
+            pr_old = pcsr_stats(csr.indptr, csr.indices, csr.n_rows,
+                                csr.n_cols, 2, 4).padding_ratio
+            pr_new = pcsr_stats(cand.indptr, cand.indices, cand.n_rows,
+                                cand.n_cols, 2, 4).padding_ratio
+            if pr_new <= pr_old:
+                self.perm = perm
+                csr = cand
+            else:
+                self.perm = np.arange(csr.n_rows)
+        self.csr = csr
+        self.dim = dim
+        if config is None:
+            if decider is not None:
+                config = decider.predict(extract_features(csr), dim)
+            elif select == "measured":
+                # autotune for THIS host (the paper's oracle measures on
+                # the deployment GPU; on CPU the TPU model mispredicts)
+                from .core.autotune import oracle_search
+                config = oracle_search(csr, dim, mode="measured",
+                                       reps=2).best_config
+            else:
+                config, _ = CostModel(csr).best(dim, config_space(dim))
+        self.config = config
+        self.op = ParamSpMMOperator(csr, config, backend=backend,
+                                    interpret=interpret,
+                                    build_transpose=build_transpose)
+
+    def __call__(self, B):
+        return self.op(B)

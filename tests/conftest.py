@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_csr(rng, n, density=0.05, skew=False):
+    from repro.core.sparse import CSRMatrix
+    A = (rng.random((n, n)) < density).astype(np.float32)
+    if skew:
+        heavy = rng.integers(0, n, max(1, n // 20))
+        A[heavy] = (rng.random((len(heavy), n)) < 0.5).astype(np.float32)
+    A = A * rng.standard_normal((n, n)).astype(np.float32)
+    return CSRMatrix.from_dense(A), A

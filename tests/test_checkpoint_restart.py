@@ -1,0 +1,81 @@
+"""Fault tolerance: checkpoint atomicity, async save, restart continuity,
+stateless data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_reduced
+from repro.data.tokens import batch_for_step
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"a": jnp.arange(5.0), "b": [jnp.ones((2, 3)), jnp.int32(7)]}
+    mgr.save(3, tree)
+    step, back = mgr.restore()
+    assert step == 3
+    assert np.allclose(back["a"], np.arange(5.0))
+    assert int(back["b"][1]) == 7
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 5, 9):
+        mgr.save(s, {"x": jnp.float32(s)})
+    assert mgr.latest_step() == 9
+    assert mgr.all_steps() == [5, 9]          # step 1 collected
+    step, tree = mgr.restore()
+    assert float(tree["x"]) == 9.0
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(2, {"x": jnp.arange(10)})
+    mgr.wait()
+    step, tree = mgr.restore()
+    assert step == 2 and np.allclose(tree["x"], np.arange(10))
+
+
+def test_data_pipeline_stateless():
+    cfg = get_reduced("qwen2-72b")
+    b1 = batch_for_step(cfg, 4, 16, step=7, seed=1)
+    b2 = batch_for_step(cfg, 4, 16, step=7, seed=1)
+    b3 = batch_for_step(cfg, 4, 16, step=8, seed=1)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_train_restart_continuity(tmp_path):
+    """Kill-and-resume: continued run behaves as if never interrupted.
+    (Losses beyond the restart can't be bitwise-compared — optimizer
+    state round-trips through f32 exactly, but donation/layout may
+    reorder reductions — so we check step continuity + loss sanity.)"""
+    from repro.launch.train import train
+    ck = str(tmp_path / "ck")
+    l_full = train(["--arch", "granite-moe-1b-a400m", "--reduced",
+                    "--steps", "14", "--batch", "2", "--seq", "16",
+                    "--ckpt-dir", str(tmp_path / "full"),
+                    "--ckpt-every", "50"])
+    train(["--arch", "granite-moe-1b-a400m", "--reduced",
+           "--steps", "7", "--batch", "2", "--seq", "16",
+           "--ckpt-dir", ck, "--ckpt-every", "3"])
+    l_resumed = train(["--arch", "granite-moe-1b-a400m", "--reduced",
+                       "--steps", "14", "--batch", "2", "--seq", "16",
+                       "--ckpt-dir", ck, "--ckpt-every", "50", "--resume"])
+    # resumed run continues from step 7 and ends near the full run's loss
+    assert len(l_resumed) <= 8
+    assert abs(l_resumed[-1] - l_full[-1]) < 0.35
+
+
+def test_crash_mid_save_keeps_previous(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"x": jnp.float32(1)})
+    # simulate a crash that left a stale tmp dir
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_2"), exist_ok=True)
+    assert mgr.latest_step() == 1
+    step, tree = mgr.restore()
+    assert step == 1 and float(tree["x"]) == 1.0

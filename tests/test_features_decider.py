@@ -1,0 +1,52 @@
+"""Feature extraction (paper Table 3) + random forest + decider."""
+import numpy as np
+import pytest
+
+from repro.core.decider import DecisionTree, RandomForest, SpMMDecider
+from repro.core.features import FEATURE_NAMES, extract_features
+from repro.core.pcsr import SpMMConfig
+from repro.core.sparse import CSRMatrix
+
+
+def test_features_on_crafted_matrix():
+    # 4 rows: degrees 2,2,0,4 ; bandwidths 3,1,-,3
+    A = np.array([[1, 0, 0, 1],
+                  [0, 1, 1, 0],
+                  [0, 0, 0, 0],
+                  [1, 1, 1, 1]], np.float32)
+    f = extract_features(CSRMatrix.from_dense(A)).as_dict()
+    assert f["n"] == 4 and f["n_hat"] == 3 and f["nnz"] == 8
+    assert f["d"] == 2.0 and f["d_max"] == 4.0
+    assert abs(f["r"] - 0.75) < 1e-9
+    assert f["bw_max"] == 3.0
+    deg = np.array([2, 2, 0, 4.0])
+    assert abs(f["cv"] - deg.std() / deg.mean()) < 1e-9
+    assert f["pr_1"] == 0.0
+    assert 0.0 <= f["pr_2"] <= 0.5
+
+
+def test_forest_learns_separable():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((400, 6))
+    y = (X[:, 2] > 0.3).astype(int) + 2 * (X[:, 4] > 0).astype(int)
+    rf = RandomForest(n_estimators=20, seed=1).fit(X[:300], y[:300], 4)
+    acc = (rf.predict(X[300:]) == y[300:]).mean()
+    assert acc > 0.85
+
+
+def test_tree_pure_leaf():
+    X = np.ones((10, 3))
+    y = np.zeros(10, np.int64)
+    t = DecisionTree().fit(X, y, 2)
+    assert (t.predict_proba(X).argmax(1) == 0).all()
+
+
+def test_decider_masks_invalid_F():
+    d = SpMMDecider()
+    # fit on trivial data so forest exists
+    from repro.core.features import MatrixFeatures
+    f = MatrixFeatures(np.ones(len(FEATURE_NAMES)))
+    big_f = [c for c in d.space if c.F == 4][0]
+    d.fit([(f, 512, big_f)] * 8)
+    pred = d.predict(f, 64)          # dim 64 → only F=1 valid
+    assert pred.F == 1

@@ -1,0 +1,95 @@
+"""PCSR format invariants: unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pcsr import (SpMMConfig, build_pcsr, config_space,
+                             pcsr_stats, split_granularity, transpose_csr)
+from repro.core.sparse import CSRMatrix
+
+from conftest import random_csr
+
+
+def _dense_from_pcsr(p):
+    """Reconstruct the dense matrix a PCSR encodes (slot accounting)."""
+    V, W, R = p.config.V, p.config.W, p.config.R
+    A = np.zeros((p.n_blocks * R, p.n_cols), np.float32)
+    K = p.K
+    for c in range(p.num_chunks):
+        for k in range(K):
+            i = c * K + k
+            col = p.colidx[i]
+            base = p.trow[c] * R + p.lrow[i] * V
+            for v in range(V):
+                A[base + v, col] += p.vals[c, v, k]
+    return A[:p.n_rows]
+
+
+@pytest.mark.parametrize("V,S,W", [(1, False, 8), (2, False, 4),
+                                   (1, True, 16), (2, True, 8)])
+def test_pcsr_roundtrip(rng, V, S, W):
+    csr, A = random_csr(rng, 77, 0.08)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, 77, 77,
+                   SpMMConfig(V=V, S=S, W=W))
+    np.testing.assert_allclose(_dense_from_pcsr(p), A, atol=1e-6)
+
+
+def test_slot_accounting(rng):
+    csr, _ = random_csr(rng, 120, 0.05, skew=True)
+    for cfg in config_space(64):
+        p = build_pcsr(csr.indptr, csr.indices, csr.data, 120, 120, cfg)
+        assert p.num_slots >= p.nnz_vec
+        assert p.nnz_vec * cfg.V >= p.nnz
+        assert 0 <= p.padding_ratio <= 1 - 1 / cfg.V + 1e-9
+        assert p.split_ratio >= 1.0
+        assert p.K % 8 == 0
+
+
+def test_stats_match_build(rng):
+    csr, _ = random_csr(rng, 200, 0.03, skew=True)
+    for V, W in [(1, 8), (2, 8), (2, 16)]:
+        st_ = pcsr_stats(csr.indptr, csr.indices, 200, 200, V, W)
+        for S in (False, True):
+            p = build_pcsr(csr.indptr, csr.indices, csr.data, 200, 200,
+                           SpMMConfig(V=V, S=S, W=W))
+            C, K, slots = st_.chunks_and_slots(S)
+            assert C == p.num_chunks
+            assert K == p.K
+            assert slots == p.num_slots
+        assert st_.nnz_vec == p.nnz_vec
+
+
+def test_split_granularity_formula():
+    # paper Eq.3 with sublane roundup
+    assert split_granularity(100, 10) == 16   # mean 10 → round8 = 16
+    assert split_granularity(8, 8) == 8
+    assert split_granularity(0, 0) == 8
+
+
+def test_transpose_involution(rng):
+    csr, A = random_csr(rng, 50, 0.1)
+    t = csr.transpose()
+    np.testing.assert_allclose(t.to_dense(), A.T, atol=1e-6)
+    np.testing.assert_allclose(t.transpose().to_dense(), A, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(5, 60), density=st.floats(0.01, 0.4),
+       v=st.sampled_from([1, 2]), s=st.booleans(),
+       w=st.sampled_from([2, 8, 16]), seed=st.integers(0, 1000))
+def test_pcsr_encodes_matrix_property(n, density, v, s, w, seed):
+    """Property: PCSR is a lossless encoding of A for every config."""
+    rng = np.random.default_rng(seed)
+    A = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    A = A.astype(np.float32)
+    csr = CSRMatrix.from_dense(A)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, n, n,
+                   SpMMConfig(V=v, S=s, W=w))
+    np.testing.assert_allclose(_dense_from_pcsr(p), A, atol=1e-6)
+
+
+def test_empty_matrix():
+    csr = CSRMatrix(np.zeros(11, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, np.float32), 10, 10)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, 10, 10, SpMMConfig())
+    assert p.nnz == 0 and p.num_chunks >= 1
