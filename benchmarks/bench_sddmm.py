@@ -1,0 +1,49 @@
+"""SDDMM engine timing across ⟨W,F,V,S⟩ configs + fused GAT message step.
+
+Per graph: engine SDDMM under the cost-model-best SpMM config vs. a
+representative sweep, plus one fused SDDMM→softmax→SpMM (GAT message)
+call — the pair every attention-GNN layer issues per step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import time_fn
+from repro.core.cost_model import CostModel
+from repro.core.engine import engine_sddmm, make_gat_message_fn
+from repro.core.pcsr import SpMMConfig, build_pcsr, config_space
+from .common import bench_corpus, emit
+
+DIM = 64
+GRAPHS = ["sbm32x256", "rmat13", "er16000", "grid128"]
+SWEEP = [SpMMConfig(V=1, S=False, W=8), SpMMConfig(V=2, S=False, W=4),
+         SpMMConfig(V=1, S=True, W=8), SpMMConfig(V=2, S=True, W=8)]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    gs = {g.name: g for g in bench_corpus()}
+    for name in GRAPHS:
+        if name not in gs:
+            continue
+        csr = gs[name].csr
+        Q = jnp.asarray(rng.standard_normal((csr.n_rows, DIM)), jnp.float32)
+        K = jnp.asarray(rng.standard_normal((csr.n_cols, DIM)), jnp.float32)
+        Vf = jnp.asarray(rng.standard_normal((csr.n_cols, DIM)), jnp.float32)
+
+        best, _ = CostModel(csr).best(DIM, config_space(DIM))
+        for cfg in [best] + [c for c in SWEEP if c != best]:
+            p = build_pcsr(csr.indptr, csr.indices, csr.data,
+                           csr.n_rows, csr.n_cols, cfg)
+            t = time_fn(lambda: engine_sddmm(p, Q, K), reps=3)
+            tag = "best" if cfg == best else "cfg"
+            emit(f"sddmm/{name}/{tag}{cfg.astuple()}", t * 1e6,
+                 f"nnz={csr.nnz};slots={p.num_slots};"
+                 f"fill={p.slot_fill:.2f}")
+
+        p = build_pcsr(csr.indptr, csr.indices, csr.data,
+                       csr.n_rows, csr.n_cols, best)
+        msg = make_gat_message_fn(p, backend="engine")
+        t = time_fn(lambda: msg(Q, K, Vf), reps=3)
+        emit(f"gat_message/{name}", t * 1e6,
+             f"cfg={best.astuple()};nnz={csr.nnz}")

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   table6 — reordering ablation                    [paper Table 6]
   fig5   — GCN/GIN end-to-end training            [paper Fig. 5]
   kernel — Pallas-kernel roofline terms           [§Roofline]
+  sddmm  — SDDMM + fused GAT message timings      [attention extension]
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ def main(argv=None):
     from benchmarks import (bench_balancing, bench_blocking,
                             bench_coarsening, bench_decider,
                             bench_gnn_train, bench_kernel, bench_reorder,
-                            bench_speedups)
+                            bench_sddmm, bench_speedups)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
@@ -38,6 +39,7 @@ def main(argv=None):
         "table6": bench_reorder.run,
         "fig5": bench_gnn_train.run,
         "kernel": bench_kernel.run,
+        "sddmm": bench_sddmm.run,
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify: fast test tier + bytecode-compile the whole tree.
+#   ./scripts/ci.sh              → tier-1 (slow tests deselected via pytest.ini)
+#   ./scripts/ci.sh -m slow      → slow tier only
+#   ./scripts/ci.sh -m "slow or not slow"  → everything
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"
+python -m compileall -q src
+echo "ci: OK"

@@ -1,5 +1,7 @@
-"""GNN training application (paper §6.5): GCN/GIN on a node-classification
-task with ParamSpMM (or a baseline SpMM) as the aggregation operator."""
+"""GNN training application (paper §6.5): GCN/GIN/GAT on a
+node-classification task with ParamSpMM (or a baseline SpMM) as the
+aggregation operator.  GAT aggregates through the fused
+SDDMM→softmax→SpMM message function over the same PCSR."""
 from __future__ import annotations
 
 import time
@@ -12,8 +14,9 @@ import numpy as np
 from repro.core.baselines import make_cusparse_analog, make_gespmm_analog
 from repro.core.pcsr import SpMMConfig
 from repro.data.tasks import NodeTask
-from repro.models.gnn import (accuracy, gcn_forward, gin_forward, init_gcn,
-                              init_gin, node_ce_loss)
+from repro.models.gnn import (accuracy, gat_forward, gcn_forward,
+                              gin_forward, init_gat, init_gcn, init_gin,
+                              node_ce_loss)
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.pipeline import ParamSpMM
 
@@ -43,8 +46,14 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
               n_layers: int = 5, steps: int = 100, lr: float = 5e-3,
               spmm_mode: str = "paramspmm", seed: int = 0,
               spmm_kwargs: dict | None = None) -> GNNTrainResult:
-    spmm, perm, cfg = build_spmm(task, hidden, spmm_mode,
-                                 **(spmm_kwargs or {}))
+    kw = dict(spmm_kwargs or {})
+    if model == "gat":
+        if spmm_mode != "paramspmm":
+            raise ValueError("gat needs the PCSR message fn "
+                             "(spmm_mode='paramspmm')")
+        # the GAT vjp differentiates the engine path — Aᵀ-PCSR is unused
+        kw.setdefault("build_transpose", False)
+    spmm, perm, cfg = build_spmm(task, hidden, spmm_mode, **kw)
     X = jnp.asarray(task.features)
     labels = jnp.asarray(task.labels)
     tmask = jnp.asarray(task.train_mask)
@@ -64,6 +73,15 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
     elif model == "gin":
         params = init_gin(key, dims)
         fwd = gin_forward
+    elif model == "gat":
+        from repro.core.engine import make_gat_message_fn
+        params = init_gat(key, dims)
+        fwd = gat_forward
+        # the message fn aggregates instead of the plain-SpMM closure,
+        # over the very same PCSR the pipeline configured
+        spmm = make_gat_message_fn(spmm.op.pcsr,
+                                   backend=kw.get("backend", "engine"),
+                                   interpret=kw.get("interpret", True))
     else:
         raise ValueError(model)
 

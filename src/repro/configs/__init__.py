@@ -20,9 +20,10 @@ _MODULES = {
     "llava-next-mistral-7b": "llava_next_mistral_7b",
     "gcn": "gcn",
     "gin": "gin",
+    "gat": "gat",
 }
 
-ARCH_IDS = [k for k in _MODULES if k not in ("gcn", "gin")]
+ARCH_IDS = [k for k in _MODULES if k not in ("gcn", "gin", "gat")]
 
 
 def _mod(arch: str):

@@ -1,0 +1,6 @@
+"""GAT (attention GNN): dot-product edge attention via the PCSR
+SDDMM→softmax→SpMM pair; layer count/dims match the GCN setup."""
+GAT = {"model": "gat", "n_layers": 3, "in_dim": 16, "out_dim": 16,
+       "hidden": 64}
+CONFIG = GAT
+REDUCED = {**GAT, "hidden": 32}

@@ -44,6 +44,113 @@ def engine_spmm(pcsr: PCSR, B):
                    n_blocks=pcsr.n_blocks, n_rows=pcsr.n_rows)
 
 
+@functools.partial(jax.jit, static_argnames=("V", "R", "K"))
+def _engine_sddmm(colidx, lrow, trow, vals, Q, K_mat, *, V, R, K):
+    """Gather/dot evaluation of per-slot SDDMM scores (C, V, K)."""
+    ck = colidx.shape[0]
+    C = ck // K
+    gathered = jnp.take(K_mat, colidx, axis=0)                # (C·K, d)
+    base = jnp.repeat(trow, K).astype(jnp.int32) * R + lrow * V
+    scores = []
+    for v in range(V):                                        # V ≤ 2, unrolled
+        # rows past n_rows (block padding) read as zero → score 0
+        qrow = jnp.take(Q, base + v, axis=0, mode="fill", fill_value=0)
+        scores.append(jnp.sum(qrow * gathered, axis=1))
+    e = jnp.stack(scores, axis=1)                             # (C·K, V)
+    e = jnp.swapaxes(e.reshape(C, K, V), 1, 2)                # (C, V, K)
+    return jnp.where(vals != 0, e, 0.0)
+
+
+def engine_sddmm(pcsr: PCSR, Q, K_mat):
+    """E = (A≠0) ⊙ (Q·Kᵀ) in PCSR slot layout, on the jit'd JAX engine."""
+    arrs = pcsr.to_jax()
+    cfg = pcsr.config
+    return _engine_sddmm(arrs["colidx"], arrs["lrow"], arrs["trow"],
+                         arrs["vals"], jnp.asarray(Q), jnp.asarray(K_mat),
+                         V=cfg.V, R=cfg.R, K=pcsr.K)
+
+
+def _slot_rows(lrow, trow, *, V, R, K):
+    """Destination row of every slot, in (C, V, K) layout."""
+    C = trow.shape[0]
+    base = trow[:, None, None].astype(jnp.int32) * R \
+        + lrow.reshape(C, 1, K) * V
+    return base + jnp.arange(V, dtype=jnp.int32)[None, :, None]
+
+
+def edge_softmax(scores, mask, rows, n_segments: int):
+    """Numerically-stable softmax over each destination row's edge set.
+
+    scores/mask/rows all (C, V, K); padding slots (mask False) get weight 0
+    and never contribute to their row's max or normalizer.
+    """
+    flat_r = rows.reshape(-1)
+    neg = jnp.where(mask, scores, -jnp.inf).reshape(-1)
+    rowmax = jax.ops.segment_max(neg, flat_r, num_segments=n_segments)
+    rowmax = jnp.where(jnp.isfinite(rowmax), rowmax, 0.0)     # empty rows
+    ex = jnp.exp(neg - rowmax[flat_r])
+    ex = jnp.where(mask.reshape(-1), ex, 0.0)
+    denom = jax.ops.segment_sum(ex, flat_r, num_segments=n_segments)
+    alpha = ex / jnp.maximum(denom[flat_r], 1e-30)
+    return alpha.reshape(scores.shape)
+
+
+def make_gat_message_fn(pcsr: PCSR, *, backend: str = "engine",
+                        interpret: bool = True, slope: float = 0.2):
+    """Differentiable fused GAT message ``f(Q, K, Vf) -> (n_rows, d)``:
+    SDDMM → LeakyReLU → softmax-over-edges → SpMM, all over one PCSR.
+
+    Scores are scaled by 1/√d_k (dot-product attention) then passed through
+    LeakyReLU(slope) as in GAT.  Like ``make_spmm_fn``, the engine backend
+    is returned as-is (natively differentiable); the Pallas backend wraps a
+    ``custom_vjp`` whose backward differentiates the pure-JAX engine path —
+    the interpret-mode kernels need no transpose rules of their own.
+    """
+    arrs = pcsr.to_jax()
+    cfg = pcsr.config
+    V, R, K, n_blocks = cfg.V, cfg.R, pcsr.K, pcsr.n_blocks
+    n_rows = pcsr.n_rows
+    mask = arrs["vals"] != 0
+    rows = _slot_rows(arrs["lrow"], arrs["trow"], V=V, R=R, K=K)
+
+    def _attend(scores, Q):
+        scaled = scores / jnp.sqrt(jnp.asarray(Q.shape[1], scores.dtype))
+        scaled = jax.nn.leaky_relu(scaled, negative_slope=slope)
+        return edge_softmax(scaled, mask, rows, n_blocks * R)
+
+    def engine_path(Q, K_mat, Vf):
+        scores = _engine_sddmm(arrs["colidx"], arrs["lrow"], arrs["trow"],
+                               arrs["vals"], Q, K_mat, V=V, R=R, K=K)
+        alpha = _attend(scores, Q)
+        return _engine(arrs["colidx"], arrs["lrow"], arrs["trow"], alpha,
+                       Vf, V=V, R=R, K=K, n_blocks=n_blocks, n_rows=n_rows)
+
+    if backend != "pallas":
+        return engine_path          # natively differentiable, no vjp needed
+
+    from repro.kernels.paramspmm.ops import paramspmm_with_vals
+    from repro.kernels.sddmm.ops import sddmm as _sddmm_call
+
+    def fwd_path(Q, K_mat, Vf):
+        scores = _sddmm_call(pcsr, Q, K_mat, interpret=interpret)
+        alpha = _attend(scores, Q)
+        return paramspmm_with_vals(pcsr, alpha, Vf, interpret=interpret)
+
+    @jax.custom_vjp
+    def f(Q, K_mat, Vf):
+        return fwd_path(Q, K_mat, Vf)
+
+    def f_fwd(Q, K_mat, Vf):
+        return fwd_path(Q, K_mat, Vf), (Q, K_mat, Vf)
+
+    def f_bwd(res, dOut):
+        _, vjp = jax.vjp(engine_path, *res)
+        return vjp(dOut)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
 def make_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
                  backend: str = "engine", interpret: bool = True):
     """Build a differentiable ``f(B) = A·B`` closed over PCSR arrays.

@@ -1,2 +1,2 @@
-from .ops import paramspmm
+from .ops import paramspmm, paramspmm_with_vals
 from .ref import spmm_ref, spmm_dense_ref

@@ -38,10 +38,19 @@ def _call(colidx, lrow, trow, init, vals, B, *, n_blocks, R, V, K, dblk,
 
 def paramspmm(pcsr: PCSR, B, *, interpret: bool = True):
     """C = A·B where A is held as PCSR. Pallas path (interpret on CPU)."""
+    return paramspmm_with_vals(pcsr, None, B, interpret=interpret)
+
+
+def paramspmm_with_vals(pcsr: PCSR, vals, B, *, interpret: bool = True):
+    """SpMM over A's *pattern* with per-slot values supplied at call time —
+    the aggregation step of attention GNNs, where the PCSR topology is fixed
+    but the edge weights (softmaxed SDDMM scores) change every step.
+    ``vals=None`` uses the values stored in the PCSR."""
     arrs = pcsr.to_jax()
     cfg = pcsr.config
     return _call(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["init"],
-                 arrs["vals"], jnp.asarray(B),
+                 arrs["vals"] if vals is None else jnp.asarray(vals),
+                 jnp.asarray(B),
                  n_blocks=pcsr.n_blocks, R=cfg.R, V=cfg.V, K=pcsr.K,
                  dblk=cfg.dblk, n_rows=pcsr.n_rows, dim=B.shape[1],
                  interpret=interpret)

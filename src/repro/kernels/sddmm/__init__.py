@@ -1,0 +1,34 @@
+"""PCSR-driven SDDMM — the attention half of the GAT operator pair.
+
+SDDMM (sampled dense-dense matrix multiplication) computes
+``E = (A ≠ 0) ⊙ (Q·Kᵀ)``: one dot product per stored nonzero of ``A``.
+Together with SpMM it forms the two-kernel core of attention GNNs
+(HGL-proto's ``GSDDMMFunction`` + ``GSPMMFunction`` pairing): SDDMM
+produces per-edge scores, a row-wise softmax normalizes them, and SpMM
+aggregates neighbor features under the resulting edge weights.
+
+Design mapping (paper ⟨W,F,V,S⟩ → SDDMM traversal)
+---------------------------------------------------
+The kernel consumes the *same* packed PCSR arrays as ParamSpMM — one
+⟨W,F,V,S⟩ configuration serves both operators, so the decider/autotune
+machinery transfers unchanged:
+
+* **V** — a slot holds a V×1 column-vector of edges: one gathered ``K``
+  row (the paper's one irregular load) feeds V query rows' dot products,
+  exactly as it feeds V output rows in SpMM.
+* **F** — thread coarsening becomes the reduction tile: each grid step
+  reduces ``Dblk = F·128`` lanes of ``Q[row]·K[col]`` into the slot's
+  partial score; J = ceil(d/Dblk) steps complete the dot product.
+* **W** — ``W`` panels form the ``R = V·W``-row block that SpMM
+  accumulates; SDDMM reuses the block/panel addressing (``trow``/``lrow``)
+  to locate the query row of every slot.
+* **S** — split chunks need no atomics here at all: SDDMM's output is
+  per-slot (``(C, V, K)``), so splitting a heavy block across chunks is
+  pure parallelism — each chunk owns its slots.
+
+Slots padded during PCSR packing are masked post-kernel with
+``vals != 0`` (matching the dense oracle's ``A ≠ 0`` sampling), so the
+edge-score tensor is exact whatever the padding ratio.
+"""
+from .ops import sddmm
+from .ref import sddmm_dense_ref, sddmm_slots_ref

@@ -1,0 +1,81 @@
+"""SDDMM Pallas TPU kernel — PCSR chunk traversal, dot-product reduction.
+
+Mirror image of ``kernels/paramspmm/kernel.py``: the same scalar-prefetched
+``colidx``/``lrow``/``trow`` arrays steer the grid, but the data flow is
+reversed — instead of scattering ``val · B[col]`` into an output block, each
+step *reduces* ``Q[row] · K[col]`` over a ``Dblk``-lane tile into the slot's
+score.  Grid ``(C, K, J)`` keeps the ``(1, V, K)`` output block resident in
+VMEM across all ``K·J`` steps of a chunk (consecutive revisits, the same
+trick the SpMM kernel plays with ``trow``), so partial dot products
+accumulate race-free in the sequential grid.
+
+Block selection per step ``(c, k, j)``:
+  Q block ``(V, Dblk)`` at panel ``trow[c]·W + lrow[c·K+k]`` — the paper's
+  coalesced dense-row access; K block ``(1, Dblk)`` at ``colidx[c·K+k]`` —
+  the one irregular gather, driven by scalar prefetch exactly as in SpMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(colidx_ref, lrow_ref, trow_ref,             # scalar prefetch
+            q_ref, k_ref,                               # VMEM inputs
+            out_ref,                                    # VMEM output
+            *, K: int):
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+
+    # first step of this chunk's pass → zero the (1, V, K) score block
+    @pl.when((k == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    qv = q_ref[...]                          # (V, Dblk) query panel
+    kv = k_ref[0, :]                         # (Dblk,) gathered key row
+    partial = jnp.sum(qv * kv[None, :], axis=1)          # (V,)
+    out_ref[0, :, k] = out_ref[0, :, k] + partial
+
+
+def sddmm_kernel(colidx, lrow, trow, Q_padded, K_padded, *,
+                 W: int, V: int, K: int, dblk: int,
+                 interpret: bool = True):
+    """Raw per-slot scores on pre-padded operands.
+
+    Q_padded: (n_blocks·R, J·dblk); K_padded: (n_k, J·dblk).
+    Returns scores (C, V, K) — unmasked (padding slots score garbage;
+    the ops.py wrapper applies the ``vals != 0`` sampling mask).
+    """
+    C = trow.shape[0]
+    dim_pad = Q_padded.shape[1]
+    assert dim_pad % dblk == 0
+    assert Q_padded.shape[0] % V == 0
+    J = dim_pad // dblk
+    grid = (C, K, J)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            # query panel: V rows addressed by block·W + local panel index
+            pl.BlockSpec((V, dblk),
+                         lambda c, k, j, ci, lr, tr: (tr[c] * W + lr[c * K + k], j)),
+            # the gather: K row chosen by the scalar-prefetched colidx
+            pl.BlockSpec((1, dblk),
+                         lambda c, k, j, ci, lr, tr: (ci[c * K + k], j)),
+        ],
+        out_specs=pl.BlockSpec((1, V, K),
+                               lambda c, k, j, ci, lr, tr: (c, 0, 0)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C, V, K), Q_padded.dtype),
+        interpret=interpret,
+        name=f"sddmm_v{V}_k{K}_w{W}_d{dblk}",
+    )
+    return fn(colidx, lrow, trow, Q_padded, K_padded)

@@ -1,0 +1,36 @@
+"""Jit'd wrapper around the SDDMM Pallas kernel: padding, masking, and the
+high-level ``sddmm(pcsr, Q, K)`` entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pcsr import PCSR
+from repro.kernels.paramspmm.ops import _pad_cols
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_blocks", "R", "W", "V", "K", "dblk", "interpret"))
+def _call(colidx, lrow, trow, vals, Q, K_mat, *, n_blocks, R, W, V, K, dblk,
+          interpret):
+    from .kernel import sddmm_kernel
+    Qp, _ = _pad_cols(Q, dblk)                   # zero rows/lanes add 0
+    Qp = jnp.pad(Qp, ((0, n_blocks * R - Qp.shape[0]), (0, 0)))
+    Kp, _ = _pad_cols(K_mat, dblk)
+    scores = sddmm_kernel(colidx, lrow, trow, Qp, Kp,
+                          W=W, V=V, K=K, dblk=dblk, interpret=interpret)
+    # sampling mask: padding slots (and explicit zeros) score exactly 0,
+    # matching the dense oracle's (A ≠ 0) ⊙ (Q·Kᵀ)
+    return jnp.where(vals != 0, scores, 0.0)
+
+
+def sddmm(pcsr: PCSR, Q, K, *, interpret: bool = True):
+    """E = (A≠0) ⊙ (Q·Kᵀ) in PCSR slot layout (C, V, K). Pallas path."""
+    arrs = pcsr.to_jax()
+    cfg = pcsr.config
+    return _call(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["vals"],
+                 jnp.asarray(Q), jnp.asarray(K),
+                 n_blocks=pcsr.n_blocks, R=cfg.R, W=cfg.W, V=cfg.V,
+                 K=pcsr.K, dblk=cfg.dblk, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Oracles for the SDDMM kernel / engine.
+
+``sddmm_dense_ref`` is the definitional reference ``(A≠0) ⊙ (Q·Kᵀ)``;
+``sddmm_slots_ref`` replays the PCSR slot accounting in plain numpy so the
+packed ``(C, V, K)`` score tensor can be checked slot-for-slot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sddmm_dense_ref(A_dense, Q, K):
+    """E[i,j] = Q[i]·K[j] where A[i,j] ≠ 0, else 0."""
+    A = np.asarray(A_dense)
+    scores = np.asarray(Q, np.float32) @ np.asarray(K, np.float32).T
+    return np.where(A != 0, scores, 0.0).astype(np.float32)
+
+
+def sddmm_slots_ref(pcsr, Q, K):
+    """Per-slot scores (C, V, K) by direct slot traversal (numpy loop)."""
+    Q = np.asarray(Q, np.float32)
+    K_mat = np.asarray(K, np.float32)
+    cfg = pcsr.config
+    V, R, Ks = cfg.V, cfg.R, pcsr.K
+    out = np.zeros((pcsr.num_chunks, V, Ks), np.float32)
+    for c in range(pcsr.num_chunks):
+        for k in range(Ks):
+            col = pcsr.colidx[c * Ks + k]
+            base = pcsr.trow[c] * R + pcsr.lrow[c * Ks + k] * V
+            for v in range(V):
+                row = base + v
+                if pcsr.vals[c, v, k] != 0 and row < pcsr.n_rows:
+                    out[c, v, k] = Q[row] @ K_mat[col]
+    return out

@@ -13,12 +13,19 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only where the installed jax has it (≥ 0.5 introduced
+    ``jax.sharding.AxisType``); on older releases every axis is Auto anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -27,7 +34,7 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh(
         (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        **_axis_type_kwargs(2))
 
 
 def data_axes(mesh) -> tuple:

@@ -1,9 +1,12 @@
-"""GCN and GIN (paper §6.5) with pluggable SpMM aggregation.
+"""GCN, GIN (paper §6.5) and GAT with pluggable sparse aggregation.
 
-The aggregation `spmm: (n, d) -> (n, d)` is a closure over the graph —
-either a ParamSpMM operator (decider-configured) or a baseline path —
-so "embed ParamSpMM into GNN training" is literally swapping this
-callable, as the paper does with its PyTorch extension.
+GCN/GIN take a `spmm: (n, d) -> (n, d)` closure over the graph — either a
+ParamSpMM operator (decider-configured) or a baseline path — so "embed
+ParamSpMM into GNN training" is literally swapping this callable, as the
+paper does with its PyTorch extension.  GAT instead takes the fused
+message closure `msg: (Q, K, Vf) -> (n, d)` built by
+``core.engine.make_gat_message_fn`` (SDDMM → softmax → SpMM over the
+same PCSR), mirroring HGL-proto's GSDDMM/GSPMM operator pair.
 """
 from __future__ import annotations
 
@@ -60,6 +63,35 @@ def gin_forward(params, X, spmm):
         agg = (1.0 + layer["eps"]) * h + spmm(h)       # (1+ε)h + A·h
         z = jax.nn.relu(agg @ layer["w1"] + layer["b1"])
         h = z @ layer["w2"] + layer["b2"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# -------------------------------------------------------------------- GAT
+def init_gat(key, layer_dims, att_dim: int | None = None):
+    """Dot-product attention GAT: per layer Wq/Wk project into the
+    attention space (att_dim, default = layer output dim), Wv transforms
+    the message features."""
+    params = []
+    for i in range(len(layer_dims) - 1):
+        key, kq, kk, kv = jax.random.split(key, 4)
+        da = att_dim or layer_dims[i + 1]
+        params.append({
+            "wq": _dense_init(kq, layer_dims[i], da),
+            "wk": _dense_init(kk, layer_dims[i], da),
+            "wv": _dense_init(kv, layer_dims[i], layer_dims[i + 1]),
+            "b": jnp.zeros(layer_dims[i + 1], jnp.float32),
+        })
+    return params
+
+
+def gat_forward(params, X, gat_msg):
+    """h'_i = Σ_j α_ij · (h_j·Wv), α = softmax_j(LeakyReLU(q_i·k_j/√d))."""
+    h = X
+    for i, layer in enumerate(params):
+        q, k, v = h @ layer["wq"], h @ layer["wk"], h @ layer["wv"]
+        h = gat_msg(q, k, v) + layer["b"]
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h

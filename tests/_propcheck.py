@@ -1,0 +1,45 @@
+"""Tiny seeded random-case generator — offline stand-in for hypothesis.
+
+Each strategy is a callable ``rng -> value``; ``propcases`` materializes
+``max_examples`` deterministic draws (numpy ``default_rng``) into a list of
+dicts suitable for ``pytest.mark.parametrize``.  Coverage is equivalent to
+``@given(...)`` with a fixed seed: N random points from the same domains,
+reproducible across runs.
+"""
+import numpy as np
+
+
+def integers(lo, hi):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def floats(lo, hi):
+    return lambda rng: float(rng.uniform(lo, hi))
+
+
+def sampled_from(options):
+    return lambda rng: options[int(rng.integers(0, len(options)))]
+
+
+def booleans():
+    return lambda rng: bool(rng.integers(0, 2))
+
+
+class Case(dict):
+    """Dict with attribute access and a stable pytest id."""
+
+    def __getattr__(self, name):
+        try:
+            return self[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __str__(self):
+        return "-".join(f"{k}={v}" for k, v in self.items())
+
+
+def propcases(max_examples, _seed=0, **strategies):
+    # leading underscore: strategies often include a literal "seed" kwarg
+    rng = np.random.default_rng(_seed)
+    return [Case({k: draw(rng) for k, draw in strategies.items()})
+            for _ in range(max_examples)]

@@ -49,6 +49,7 @@ def test_data_pipeline_stateless():
     assert not np.array_equal(b1["tokens"], b3["tokens"])
 
 
+@pytest.mark.slow
 def test_train_restart_continuity(tmp_path):
     """Kill-and-resume: continued run behaves as if never interrupted.
     (Losses beyond the restart can't be bitwise-compared — optimizer

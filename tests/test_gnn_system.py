@@ -15,6 +15,7 @@ def task():
                           p_in=0.2, noise=1.0, seed=2)
 
 
+@pytest.mark.slow
 def test_gcn_converges_with_paramspmm(task):
     r = train_gnn(task, model="gcn", hidden=32, n_layers=3, steps=50,
                   spmm_mode="paramspmm")
@@ -22,6 +23,7 @@ def test_gcn_converges_with_paramspmm(task):
     assert r.losses[-1] < r.losses[0] * 0.2
 
 
+@pytest.mark.slow
 def test_gin_converges(task):
     r = train_gnn(task, model="gin", hidden=32, n_layers=3, steps=80,
                   spmm_mode="paramspmm", lr=2e-3)
@@ -47,6 +49,36 @@ def test_pipeline_matches_ref(task):
     ref = spmm_ref(csr.indptr, csr.indices, csr.data, B, csr.n_rows)
     np.testing.assert_allclose(np.asarray(p(B)), np.asarray(ref),
                                atol=1e-4, rtol=1e-4)
+
+
+def test_gat_loss_decreases_engine(task):
+    """Attention GNN: short train run through SDDMM→softmax→SpMM."""
+    r = train_gnn(task, model="gat", hidden=16, n_layers=2, steps=8,
+                  spmm_mode="paramspmm", lr=1e-2,
+                  spmm_kwargs={"reorder": False})
+    assert np.isfinite(r.losses).all()
+    assert r.losses[-1] < r.losses[0]
+
+
+@pytest.mark.slow
+def test_gat_converges(task):
+    r = train_gnn(task, model="gat", hidden=32, n_layers=2, steps=60,
+                  spmm_mode="paramspmm", lr=5e-3)
+    assert r.val_acc > 0.8
+    assert r.losses[-1] < r.losses[0] * 0.5
+
+
+@pytest.mark.slow
+def test_gat_pallas_backend_trains():
+    from repro.data.tasks import community_task
+    small = community_task(n_blocks=3, block_size=32, feat_dim=8,
+                           p_in=0.3, noise=0.5, seed=1)
+    r = train_gnn(small, model="gat", hidden=8, n_layers=2, steps=4,
+                  spmm_mode="paramspmm", lr=1e-2,
+                  spmm_kwargs={"reorder": False, "backend": "pallas",
+                               "interpret": True})
+    assert np.isfinite(r.losses).all()
+    assert r.losses[-1] < r.losses[0]
 
 
 def test_pipeline_reorder_consistency(task):

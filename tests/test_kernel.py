@@ -1,15 +1,15 @@
-"""Pallas kernel vs ref.py oracle: shape/dtype/config sweeps + hypothesis."""
+"""Pallas kernel vs ref.py oracle: shape/dtype/config sweeps + properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.pcsr import SpMMConfig, build_pcsr
 from repro.core.sparse import CSRMatrix
 from repro.kernels.paramspmm import paramspmm, spmm_ref
 
 from conftest import random_csr
+from _propcheck import booleans, floats, integers, propcases, sampled_from
 
 
 def _run(csr, dim, cfg, dtype=jnp.float32, seed=0):
@@ -53,17 +53,18 @@ def test_kernel_skewed(rng):
         np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
 
 
-@settings(max_examples=12, deadline=None)
-@given(n=st.integers(8, 50), dim=st.sampled_from([16, 64, 130]),
-       density=st.floats(0.02, 0.3), v=st.sampled_from([1, 2]),
-       s=st.booleans(), seed=st.integers(0, 99))
-def test_kernel_property(n, dim, density, v, s, seed):
-    rng = np.random.default_rng(seed)
-    A = ((rng.random((n, n)) < density)
-         * rng.standard_normal((n, n))).astype(np.float32)
+@pytest.mark.slow
+@pytest.mark.parametrize("case", propcases(
+    12, n=integers(8, 50), dim=sampled_from([16, 64, 130]),
+    density=floats(0.02, 0.3), v=sampled_from([1, 2]),
+    s=booleans(), seed=integers(0, 99)), ids=str)
+def test_kernel_property(case):
+    rng = np.random.default_rng(case.seed)
+    A = ((rng.random((case.n, case.n)) < case.density)
+         * rng.standard_normal((case.n, case.n))).astype(np.float32)
     csr = CSRMatrix.from_dense(A)
-    cfg = SpMMConfig(V=v, S=s, W=8 // v)
-    out, ref = _run(csr, dim, cfg, seed=seed)
+    cfg = SpMMConfig(V=case.v, S=case.s, W=8 // case.v)
+    out, ref = _run(csr, case.dim, cfg, seed=case.seed)
     np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
 
 

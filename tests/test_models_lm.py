@@ -22,7 +22,14 @@ def _batch_for(cfg, cell, seed=0):
     return out
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# scan/audio archs pay a 10-17 s trace each — deferred to the slow tier
+_HEAVY_SMOKE = {"hymba-1.5b", "whisper-tiny", "rwkv6-1.6b"}
+_SMOKE_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_SMOKE else a
+    for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _SMOKE_PARAMS)
 def test_arch_smoke_train_step(arch):
     """Reduced config: one forward/train step, shapes + no NaNs."""
     cfg = get_reduced(arch)
@@ -37,7 +44,7 @@ def test_arch_smoke_train_step(arch):
     assert np.isfinite(gn) and gn > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _SMOKE_PARAMS)
 def test_arch_smoke_decode_step(arch):
     cfg = get_reduced(arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
@@ -50,6 +57,7 @@ def test_arch_smoke_decode_step(arch):
     assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-72b", "gemma2-27b", "chatglm3-6b",
                                   "granite-moe-1b-a400m", "hymba-1.5b",
                                   "rwkv6-1.6b", "llava-next-mistral-7b"])
@@ -81,6 +89,7 @@ def test_decode_matches_forward(arch):
     np.testing.assert_allclose(got, ref, atol=0.15, rtol=0.05)
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_forward():
     cfg = get_reduced("whisper-tiny")
     B, Sa, St = 2, 16, 12
@@ -120,6 +129,7 @@ def test_whisper_decode_matches_forward():
     np.testing.assert_allclose(got, ref, atol=0.2, rtol=0.05)
 
 
+@pytest.mark.slow
 def test_hymba_ring_buffer_beyond_window():
     """Decode past the SWA window: ring cache must keep exactly the last
     ``window`` keys (parallel forward with the same window as oracle)."""

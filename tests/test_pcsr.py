@@ -1,13 +1,13 @@
-"""PCSR format invariants: unit + hypothesis property tests."""
+"""PCSR format invariants: unit + seeded property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.pcsr import (SpMMConfig, build_pcsr, config_space,
                              pcsr_stats, split_granularity, transpose_csr)
 from repro.core.sparse import CSRMatrix
 
 from conftest import random_csr
+from _propcheck import booleans, floats, integers, propcases, sampled_from
 
 
 def _dense_from_pcsr(p):
@@ -73,18 +73,19 @@ def test_transpose_involution(rng):
     np.testing.assert_allclose(t.transpose().to_dense(), A, atol=1e-6)
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(5, 60), density=st.floats(0.01, 0.4),
-       v=st.sampled_from([1, 2]), s=st.booleans(),
-       w=st.sampled_from([2, 8, 16]), seed=st.integers(0, 1000))
-def test_pcsr_encodes_matrix_property(n, density, v, s, w, seed):
+@pytest.mark.parametrize("case", propcases(
+    25, n=integers(5, 60), density=floats(0.01, 0.4),
+    v=sampled_from([1, 2]), s=booleans(),
+    w=sampled_from([2, 8, 16]), seed=integers(0, 1000)), ids=str)
+def test_pcsr_encodes_matrix_property(case):
     """Property: PCSR is a lossless encoding of A for every config."""
-    rng = np.random.default_rng(seed)
-    A = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    rng = np.random.default_rng(case.seed)
+    A = (rng.random((case.n, case.n)) < case.density) \
+        * rng.standard_normal((case.n, case.n))
     A = A.astype(np.float32)
     csr = CSRMatrix.from_dense(A)
-    p = build_pcsr(csr.indptr, csr.indices, csr.data, n, n,
-                   SpMMConfig(V=v, S=s, W=w))
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, case.n, case.n,
+                   SpMMConfig(V=case.v, S=case.s, W=case.w))
     np.testing.assert_allclose(_dense_from_pcsr(p), A, atol=1e-6)
 
 

@@ -2,9 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.selective_scan import selective_scan, selective_scan_ref
+from _propcheck import integers, propcases, sampled_from
 
 
 def _mk(rng, B, S, N, Di):
@@ -15,6 +15,7 @@ def _mk(rng, B, S, N, Di):
     return dA, dBx, C
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,S,N,Di,chunk,tile", [
     (2, 64, 4, 128, 16, 128),
     (1, 100, 8, 200, 32, 128),     # padding on both S and Di
@@ -40,17 +41,19 @@ def test_state_carries_across_chunks():
     np.testing.assert_allclose(y[0, -1, 0], expect_last, rtol=1e-3)
 
 
-@settings(max_examples=10, deadline=None)
-@given(S=st.integers(4, 70), N=st.sampled_from([2, 4, 8]),
-       Di=st.sampled_from([32, 130]), seed=st.integers(0, 99))
-def test_selective_scan_property(S, N, Di, seed):
-    rng = np.random.default_rng(seed)
-    dA, dBx, C = _mk(rng, 1, S, N, Di)
+@pytest.mark.slow
+@pytest.mark.parametrize("case", propcases(
+    10, S=integers(4, 70), N=sampled_from([2, 4, 8]),
+    Di=sampled_from([32, 130]), seed=integers(0, 99)), ids=str)
+def test_selective_scan_property(case):
+    rng = np.random.default_rng(case.seed)
+    dA, dBx, C = _mk(rng, 1, case.S, case.N, case.Di)
     got = np.asarray(selective_scan(dA, dBx, C, chunk=16, tile=128))
     ref = np.asarray(selective_scan_ref(dA, dBx, C))
     np.testing.assert_allclose(got, ref, atol=2e-4, rtol=2e-4)
 
 
+@pytest.mark.slow
 def test_mamba_branch_backends_agree():
     """hymba forward is identical whichever scan backend runs."""
     import jax
