@@ -1,23 +1,50 @@
-"""SDDMM engine timing across ⟨W,F,V,S⟩ configs + fused GAT message step.
+"""SDDMM / fused GAT-attention timings across ⟨W,F,V,S⟩ configs.
 
-Per graph: engine SDDMM under the cost-model-best SpMM config vs. a
-representative sweep, plus one fused SDDMM→softmax→SpMM (GAT message)
-call — the pair every attention-GNN layer issues per step."""
+Corpus scale (jitted JAX engine — the CPU-meaningful numbers): engine
+SDDMM under the cost-model-best config vs. a representative sweep, the
+unfused attention front half (SDDMM + segment softmax), and the full GAT
+message step single-head and 4-head, with the analytical ``sddmm_cost``
+estimate emitted next to the measurement so cost-model drift is visible.
+
+Kernel scale (interpret-mode Pallas is ~100µs/grid-step on CPU, so a
+small graph): the fused ``sddmm_softmax`` kernel vs. its unfused engine
+oracle — the pair whose HBM-round-trip difference the fusion exists to
+remove; on real TPUs this comparison is the one to re-run first."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import time_fn
 from repro.core.cost_model import CostModel
-from repro.core.engine import engine_sddmm, make_gat_message_fn
+from repro.core.engine import (_slot_rows, edge_softmax, engine_sddmm,
+                               make_gat_message_fn)
 from repro.core.pcsr import SpMMConfig, build_pcsr, config_space
+from repro.data.graphs import rmat
+from repro.kernels.sddmm import sddmm_softmax
 from .common import bench_corpus, emit
 
 DIM = 64
+HEADS = 4
 GRAPHS = ["sbm32x256", "rmat13", "er16000", "grid128"]
 SWEEP = [SpMMConfig(V=1, S=False, W=8), SpMMConfig(V=2, S=False, W=4),
          SpMMConfig(V=1, S=True, W=8), SpMMConfig(V=2, S=True, W=8)]
+
+
+def _unfused_softmax_fn(p, Q, K):
+    cfg = p.config
+    arrs = p.to_jax()
+    mask = arrs["vals"] != 0
+    rows = _slot_rows(arrs["lrow"], arrs["trow"], V=cfg.V, R=cfg.R, K=p.K)
+
+    @jax.jit
+    def fn():
+        s = engine_sddmm(p, Q, K)
+        s = jax.nn.leaky_relu(s / jnp.sqrt(jnp.float32(Q.shape[-1])), 0.2)
+        return edge_softmax(s, mask, rows, p.n_blocks * cfg.R)
+
+    return fn
 
 
 def run():
@@ -27,23 +54,56 @@ def run():
         if name not in gs:
             continue
         csr = gs[name].csr
+        cm = CostModel(csr)
         Q = jnp.asarray(rng.standard_normal((csr.n_rows, DIM)), jnp.float32)
         K = jnp.asarray(rng.standard_normal((csr.n_cols, DIM)), jnp.float32)
         Vf = jnp.asarray(rng.standard_normal((csr.n_cols, DIM)), jnp.float32)
 
-        best, _ = CostModel(csr).best(DIM, config_space(DIM))
+        best, _ = cm.best(DIM, config_space(DIM))
         for cfg in [best] + [c for c in SWEEP if c != best]:
             p = build_pcsr(csr.indptr, csr.indices, csr.data,
                            csr.n_rows, csr.n_cols, cfg)
             t = time_fn(lambda: engine_sddmm(p, Q, K), reps=3)
             tag = "best" if cfg == best else "cfg"
+            model_us = cm.cost(DIM, cfg, op="sddmm").total * 1e6
             emit(f"sddmm/{name}/{tag}{cfg.astuple()}", t * 1e6,
                  f"nnz={csr.nnz};slots={p.num_slots};"
-                 f"fill={p.slot_fill:.2f}")
+                 f"fill={p.slot_fill:.2f};model_us={model_us:.1f}")
 
+        # GAT message step under the pair-optimal config, 1 and 4 heads
+        gat_best, _ = cm.best(DIM, config_space(DIM), op="gat")
         p = build_pcsr(csr.indptr, csr.indices, csr.data,
-                       csr.n_rows, csr.n_cols, best)
+                       csr.n_rows, csr.n_cols, gat_best)
+        t = time_fn(_unfused_softmax_fn(p, Q, K), reps=3)
+        emit(f"gat_softmax/{name}/engine", t * 1e6,
+             f"cfg={gat_best.astuple()}")
         msg = make_gat_message_fn(p, backend="engine")
         t = time_fn(lambda: msg(Q, K, Vf), reps=3)
         emit(f"gat_message/{name}", t * 1e6,
-             f"cfg={best.astuple()};nnz={csr.nnz}")
+             f"cfg={gat_best.astuple()};nnz={csr.nnz};"
+             f"model_us={cm.time(DIM, gat_best, op='gat') * 1e6:.1f}")
+        Qh = jnp.asarray(rng.standard_normal(
+            (HEADS, csr.n_rows, DIM // HEADS)), jnp.float32)
+        Kh = jnp.asarray(rng.standard_normal(
+            (HEADS, csr.n_cols, DIM // HEADS)), jnp.float32)
+        Vh = jnp.asarray(rng.standard_normal(
+            (HEADS, csr.n_cols, DIM // HEADS)), jnp.float32)
+        t = time_fn(lambda: msg(Qh, Kh, Vh), reps=3)
+        emit(f"gat_message/{name}/h{HEADS}", t * 1e6,
+             f"cfg={gat_best.astuple()}")
+
+    # fused kernel vs unfused oracle at interpret-feasible scale
+    small = rmat(10, 8, seed=0)
+    cm = CostModel(small)
+    gat_best, _ = cm.best(DIM, config_space(DIM), op="gat")
+    p = build_pcsr(small.indptr, small.indices, small.data,
+                   small.n_rows, small.n_cols, gat_best)
+    Q = jnp.asarray(rng.standard_normal((small.n_rows, DIM)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((small.n_cols, DIM)), jnp.float32)
+    t = time_fn(_unfused_softmax_fn(p, Q, K), reps=3)
+    emit("gat_softmax/rmat10/engine", t * 1e6,
+         f"cfg={gat_best.astuple()};nnz={small.nnz}")
+    t = time_fn(lambda: sddmm_softmax(p, Q, K), reps=3)
+    emit("gat_softmax/rmat10/fused_interpret", t * 1e6,
+         f"cfg={gat_best.astuple()};nnz={small.nnz};"
+         "one kernel, softmax stats in-epilogue")

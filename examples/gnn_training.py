@@ -26,13 +26,14 @@ def main():
               f"(vendor baseline {base.seconds_per_step*1e3:.1f} ms/step, "
               f"acc {base.val_acc:.3f})")
 
+    from repro.configs.gat import GAT_MH
     gat = train_gnn(task, model="gat", hidden=64, n_layers=3, steps=40,
-                    spmm_mode="paramspmm", lr=5e-3)
-    print(f"GAT: ParamSpMM cfg={gat.config.astuple()} "
+                    spmm_mode="paramspmm", lr=5e-3, heads=GAT_MH["heads"])
+    print(f"GAT({GAT_MH['heads']} heads): ParamSpMM cfg={gat.config.astuple()} "
           f"loss {gat.losses[0]:.3f}→{gat.losses[-1]:.3f} "
           f"val_acc={gat.val_acc:.3f} "
           f"{gat.seconds_per_step*1e3:.1f} ms/step "
-          f"(SDDMM→softmax→SpMM per layer)")
+          f"(fused SDDMM→softmax, then SpMM, per layer)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs check: every ``repro.*`` symbol referenced in README.md and
+docs/*.md must actually exist.
+
+Two kinds of references are verified:
+
+* import statements inside fenced code blocks
+  (``from repro.x import a, b`` / ``import repro.x``);
+* dotted names in inline code or prose (`repro.core.engine.make_gat_message_fn`,
+  including a trailing call like ``ParamSpMM(csr, ...)`` stripped) —
+  resolved as the longest importable module prefix + ``getattr`` chain.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+FENCE = re.compile(r"```(?:\w*)\n(.*?)```", re.S)
+FROM_IMPORT = re.compile(r"^\s*from\s+(repro[\w.]*)\s+import\s+(.+)$", re.M)
+PLAIN_IMPORT = re.compile(r"^\s*import\s+(repro[\w.]*)", re.M)
+DOTTED = re.compile(r"`(repro(?:\.\w+)+)")
+
+
+def resolve(dotted: str) -> bool:
+    """Longest importable module prefix, then getattr the rest."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+            return True
+        except AttributeError:
+            return False
+    return False
+
+
+def refs_in(text: str):
+    refs = set()
+    for block in FENCE.findall(text):
+        for mod, names in FROM_IMPORT.findall(block):
+            for name in names.split(","):
+                name = name.split(" as ")[0].strip().strip("()")
+                if name:
+                    refs.add(f"{mod}.{name}")
+        for mod in PLAIN_IMPORT.findall(block):
+            refs.add(mod)
+    refs.update(DOTTED.findall(text))
+    return refs
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    failures = []
+    for f in files:
+        for ref in sorted(refs_in(f.read_text())):
+            if not resolve(ref):
+                failures.append((f.name, ref))
+    for fname, ref in failures:
+        print(f"DOCS FAIL {fname}: unresolved symbol {ref}")
+    print(f"check_docs: {'FAIL' if failures else 'OK'} "
+          f"({len(files)} files)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

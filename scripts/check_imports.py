@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""Compile-check: import every ``benchmarks/bench_*.py`` and
+``examples/*.py`` module so refactors can't silently break the drivers
+(all of them keep module-level code import-safe behind ``main()`` /
+``__main__`` guards)."""
+from __future__ import annotations
+
+import importlib
+import importlib.util
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))                    # the benchmarks package
+sys.path.insert(0, str(ROOT / "src"))            # repro
+
+
+def main() -> int:
+    failures = []
+    for path in sorted((ROOT / "benchmarks").glob("bench_*.py")):
+        name = f"benchmarks.{path.stem}"
+        try:
+            importlib.import_module(name)
+        except Exception as e:                   # noqa: BLE001 — report all
+            failures.append((name, e))
+    for path in sorted((ROOT / "examples").glob("*.py")):
+        name = f"examples_{path.stem}"
+        try:
+            spec = importlib.util.spec_from_file_location(name, path)
+            mod = importlib.util.module_from_spec(spec)
+            sys.modules[name] = mod
+            spec.loader.exec_module(mod)
+        except Exception as e:                   # noqa: BLE001
+            failures.append((str(path), e))
+    for name, e in failures:
+        print(f"IMPORT FAIL {name}: {type(e).__name__}: {e}")
+    print(f"check_imports: {'FAIL' if failures else 'OK'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

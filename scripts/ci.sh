@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verify: fast test tier + bytecode-compile the whole tree.
+# Tier-1 verify: fast test tier + bytecode-compile + import/docs checks.
 #   ./scripts/ci.sh              → tier-1 (slow tests deselected via pytest.ini)
 #   ./scripts/ci.sh -m slow      → slow tier only
 #   ./scripts/ci.sh -m "slow or not slow"  → everything
@@ -8,4 +8,6 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python -m compileall -q src
+python scripts/check_imports.py   # every bench_*/example module imports
+python scripts/check_docs.py      # README/docs symbol references resolve
 echo "ci: OK"

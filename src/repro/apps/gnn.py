@@ -44,15 +44,19 @@ def build_spmm(task: NodeTask, dim: int, mode: str = "paramspmm", **kw):
 
 def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
               n_layers: int = 5, steps: int = 100, lr: float = 5e-3,
-              spmm_mode: str = "paramspmm", seed: int = 0,
+              spmm_mode: str = "paramspmm", seed: int = 0, heads: int = 1,
               spmm_kwargs: dict | None = None) -> GNNTrainResult:
     kw = dict(spmm_kwargs or {})
     if model == "gat":
         if spmm_mode != "paramspmm":
             raise ValueError("gat needs the PCSR message fn "
                              "(spmm_mode='paramspmm')")
-        # the GAT vjp differentiates the engine path — Aᵀ-PCSR is unused
-        kw.setdefault("build_transpose", False)
+        # pick the config for the SDDMM+SpMM pair, not the SpMM alone
+        kw.setdefault("op", "gat")
+        # engine backward is native autodiff; the Pallas backward runs its
+        # dK/dVf SpMMs on the operator's cached transpose PCSR
+        kw.setdefault("build_transpose",
+                      kw.get("backend", "engine") == "pallas")
     spmm, perm, cfg = build_spmm(task, hidden, spmm_mode, **kw)
     X = jnp.asarray(task.features)
     labels = jnp.asarray(task.labels)
@@ -74,12 +78,14 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
         params = init_gin(key, dims)
         fwd = gin_forward
     elif model == "gat":
+        import functools
+
         from repro.core.engine import make_gat_message_fn
-        params = init_gat(key, dims)
-        fwd = gat_forward
+        params = init_gat(key, dims, heads=heads)
+        fwd = functools.partial(gat_forward, heads=heads)
         # the message fn aggregates instead of the plain-SpMM closure,
-        # over the very same PCSR the pipeline configured
-        spmm = make_gat_message_fn(spmm.op.pcsr,
+        # over the very same PCSR (+ transpose PCSR) the pipeline built
+        spmm = make_gat_message_fn(spmm.op.pcsr, spmm.op.pcsr_t,
                                    backend=kw.get("backend", "engine"),
                                    interpret=kw.get("interpret", True))
     else:

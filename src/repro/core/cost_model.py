@@ -74,8 +74,49 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
         flops=flops, steps=steps)
 
 
+def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
+               dtype_bytes: int = DTYPE_BYTES) -> CostBreakdown:
+    """Price one fused SDDMM(+softmax epilogue) under ⟨W,F,V,S⟩.
+
+    SDDMM is *reduction*-bound where SpMM is scatter-bound: every grid step
+    streams a (V, Dblk) query panel AND the gathered (1, Dblk) key row but
+    writes almost nothing — the output is one score per slot plus two
+    (R,)-row softmax stats per block, independent of ``dim``.  Compute
+    still scales with dim (the dot products), so large-F configs trade the
+    panel re-reads against MAC-job gap exactly as the paper's coarsening
+    analysis predicts — just with the output-traffic term ~absent.
+    """
+    assert stats.V == config.V and stats.W == config.W
+    C, K, slots = stats.chunks_and_slots(config.S)
+    dblk = config.dblk
+    J = -(-dim // dblk)
+    steps = J * C * K
+    # per step: the key-row gather (1, Dblk) + the query panel (V, Dblk)
+    bytes_gather = steps * (1 + config.V) * dblk * dtype_bytes
+    # colidx/lrow scalars per slot + trow/init per chunk + the mask vals
+    bytes_meta = C * K * 8 + C * 8 + C * config.V * K * dtype_bytes
+    # scores written once per slot; online-softmax stats once per block
+    bytes_out = (C * config.V * K
+                 + 2 * stats.n_nonempty_blocks * config.R) * dtype_bytes
+    # dot-product MACs + the ~8-op exp/max epilogue per slot row
+    flops = 2.0 * steps * config.V * dblk + 8.0 * C * K * config.V
+    return CostBreakdown(
+        t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
+        t_compute=flops / VPU_FLOPS,
+        t_overhead=steps * STEP_OVERHEAD,
+        bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
+        flops=flops, steps=steps)
+
+
 class CostModel:
-    """Caches per-(V,W) stats for one matrix; prices any config × dim."""
+    """Caches per-(V,W) stats for one matrix; prices any config × dim.
+
+    ``op`` selects the operator being priced: ``"spmm"`` (scatter-bound
+    kernel), ``"sddmm"`` (reduction-bound kernel), or ``"gat"`` — the
+    attention message pipeline, priced as one fused SDDMM+softmax pass plus
+    one SpMM aggregation pass, so ``best(..., op="gat")`` picks the config
+    minimizing the *pair*, not the SpMM alone.
+    """
 
     def __init__(self, csr: CSRMatrix):
         self.csr = csr
@@ -88,16 +129,26 @@ class CostModel:
                                           self.csr.n_rows, self.csr.n_cols, V, W)
         return self._stats[key]
 
-    def cost(self, dim: int, config: SpMMConfig) -> CostBreakdown:
-        return kernel_cost(self.stats(config.V, config.W), dim, config)
+    def cost(self, dim: int, config: SpMMConfig,
+             op: str = "spmm") -> CostBreakdown:
+        st = self.stats(config.V, config.W)
+        if op == "spmm":
+            return kernel_cost(st, dim, config)
+        if op == "sddmm":
+            return sddmm_cost(st, dim, config)
+        raise ValueError(f"no single-kernel breakdown for op={op!r}")
 
-    def time(self, dim: int, config: SpMMConfig) -> float:
-        return self.cost(dim, config).total
+    def time(self, dim: int, config: SpMMConfig, op: str = "spmm") -> float:
+        if op == "gat":
+            return (self.cost(dim, config, "sddmm").total
+                    + self.cost(dim, config, "spmm").total)
+        return self.cost(dim, config, op).total
 
-    def best(self, dim: int, space) -> tuple[SpMMConfig, float]:
+    def best(self, dim: int, space,
+             op: str = "spmm") -> tuple[SpMMConfig, float]:
         best_cfg, best_t = None, np.inf
         for cfg in space:
-            t = self.time(dim, cfg)
+            t = self.time(dim, cfg, op)
             if t < best_t:
                 best_cfg, best_t = cfg, t
         return best_cfg, best_t

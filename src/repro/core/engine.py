@@ -8,6 +8,12 @@ the TPU artifact; both are validated against ``ref.py``.
 ``make_spmm_fn`` builds the differentiable operator: the backward SpMM
 ``dB = Aᵀ·dC`` runs a second PCSR built for ``Aᵀ`` — GNN training performs
 forward and backward SpMM exactly as the paper's PyTorch extension does.
+
+``make_gat_message_fn`` builds the attention-GNN operator over the same
+PCSR: SDDMM → LeakyReLU → edge softmax → SpMM, single- or multi-head.  On
+the Pallas backend both the forward (fused softmax epilogue) and the
+dedicated backward (transpose-PCSR SpMMs) run entirely in kernels; see the
+function docstring and docs/OPERATORS.md for the exact pipelines.
 """
 from __future__ import annotations
 
@@ -95,16 +101,39 @@ def edge_softmax(scores, mask, rows, n_segments: int):
     return alpha.reshape(scores.shape)
 
 
-def make_gat_message_fn(pcsr: PCSR, *, backend: str = "engine",
+def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
+                        backend: str = "engine",
                         interpret: bool = True, slope: float = 0.2):
     """Differentiable fused GAT message ``f(Q, K, Vf) -> (n_rows, d)``:
     SDDMM → LeakyReLU → softmax-over-edges → SpMM, all over one PCSR.
 
     Scores are scaled by 1/√d_k (dot-product attention) then passed through
-    LeakyReLU(slope) as in GAT.  Like ``make_spmm_fn``, the engine backend
-    is returned as-is (natively differentiable); the Pallas backend wraps a
-    ``custom_vjp`` whose backward differentiates the pure-JAX engine path —
-    the interpret-mode kernels need no transpose rules of their own.
+    LeakyReLU(slope) as in GAT.  Multi-head: rank-3 ``(H, n, d)`` operands
+    return ``(H, n_rows, d)`` — the Pallas backend batches every head
+    through one head-tiled kernel call (a single compilation), the engine
+    backend vmaps its jitted path.
+
+    Backends:
+
+    * ``"engine"`` — the pure-JAX path, returned as-is: natively
+      differentiable, no ``custom_vjp`` required.
+    * ``"pallas"`` — forward runs the *fused* SDDMM→softmax kernel
+      (``kernels.sddmm.ops.sddmm_softmax``: row max/normalizer accumulated
+      in the kernel epilogue while the score block is VMEM resident)
+      followed by the SpMM aggregation kernel.  The backward is a dedicated
+      all-Pallas pipeline — no engine fallback:
+
+        dα  = SDDMM(pcsr, dOut, Vf)            (dα_ij = dOut_i·Vf_j)
+        dx  = α ⊙ (dα − Σ_row α·dα)            (softmax vjp, per-slot)
+        de  = dx · scale · LeakyReLU'(x)        (activation chain)
+        dQ  = SpMM(pcsr,  de, K)               (row-gather of keys)
+        dK  = SpMM(pcsrᵀ, deᵀ, Q)              (transpose-PCSR SpMM)
+        dVf = SpMM(pcsrᵀ, αᵀ, dOut)            (transpose-PCSR SpMM)
+
+      The transpose PCSR is built once (``core.pcsr.transpose_pcsr``) when not
+      supplied — pass ``ParamSpMMOperator.pcsr_t`` to share the cached one
+      — and slot tensors move between the two layouts through a
+      precomputed ``slot_transfer_map`` gather/scatter.
     """
     arrs = pcsr.to_jax()
     cfg = pcsr.config
@@ -125,27 +154,65 @@ def make_gat_message_fn(pcsr: PCSR, *, backend: str = "engine",
         return _engine(arrs["colidx"], arrs["lrow"], arrs["trow"], alpha,
                        Vf, V=V, R=R, K=K, n_blocks=n_blocks, n_rows=n_rows)
 
+    def engine_fn(Q, K_mat, Vf):
+        if jnp.ndim(Q) == 3:
+            return jax.vmap(engine_path)(Q, K_mat, Vf)
+        return engine_path(Q, K_mat, Vf)
+
     if backend != "pallas":
-        return engine_path          # natively differentiable, no vjp needed
+        return engine_fn            # natively differentiable, no vjp needed
 
     from repro.kernels.paramspmm.ops import paramspmm_with_vals
-    from repro.kernels.sddmm.ops import sddmm as _sddmm_call
+    from repro.kernels.sddmm.ops import sddmm as _sddmm_call, sddmm_softmax
+
+    from .pcsr import slot_transfer_map, transpose_pcsr
+    if pcsr_t is None:
+        pcsr_t = transpose_pcsr(pcsr)
+    f_idx, t_idx = slot_transfer_map(pcsr, pcsr_t)
+    n_tslots = pcsr_t.num_chunks * cfg.V * pcsr_t.K
+    flat_rows = rows.reshape(-1)
+
+    def _to_transpose(x):
+        """Re-lay a (..., C, V, K) slot tensor onto the Aᵀ PCSR's slots."""
+        lead = x.shape[:-3]
+        tf = jnp.zeros(lead + (n_tslots,), x.dtype)
+        tf = tf.at[..., t_idx].set(x.reshape(lead + (-1,))[..., f_idx])
+        return tf.reshape(lead + (pcsr_t.num_chunks, cfg.V, pcsr_t.K))
+
+    def _rowsum(x):
+        """Per-slot broadcast of Σ over each destination row's slots."""
+        s = jax.ops.segment_sum(x.reshape(-1), flat_rows,
+                                num_segments=n_blocks * R)
+        return s[flat_rows].reshape(x.shape)
 
     def fwd_path(Q, K_mat, Vf):
-        scores = _sddmm_call(pcsr, Q, K_mat, interpret=interpret)
-        alpha = _attend(scores, Q)
-        return paramspmm_with_vals(pcsr, alpha, Vf, interpret=interpret)
+        alpha, logits = sddmm_softmax(pcsr, Q, K_mat, slope=slope,
+                                      interpret=interpret, with_logits=True)
+        out = paramspmm_with_vals(pcsr, alpha, Vf, interpret=interpret)
+        return out, (Q, K_mat, Vf, alpha, logits)
 
     @jax.custom_vjp
     def f(Q, K_mat, Vf):
-        return fwd_path(Q, K_mat, Vf)
+        return fwd_path(Q, K_mat, Vf)[0]
 
     def f_fwd(Q, K_mat, Vf):
-        return fwd_path(Q, K_mat, Vf), (Q, K_mat, Vf)
+        return fwd_path(Q, K_mat, Vf)
 
     def f_bwd(res, dOut):
-        _, vjp = jax.vjp(engine_path, *res)
-        return vjp(dOut)
+        Q, K_mat, Vf, alpha, logits = res
+        scale = 1.0 / jnp.sqrt(jnp.asarray(Q.shape[-1], dOut.dtype))
+        dalpha = _sddmm_call(pcsr, dOut, Vf, interpret=interpret)
+        rsum = (jax.vmap(_rowsum) if alpha.ndim == 4 else _rowsum)
+        dx = alpha * (dalpha - rsum(alpha * dalpha))       # softmax vjp
+        # LeakyReLU' from the saved logits: LeakyReLU preserves sign, so
+        # sign(logits) = sign(pre-activation); masked slots have dx = 0.
+        de = dx * scale * jnp.where(logits >= 0, 1.0, slope)
+        dQ = paramspmm_with_vals(pcsr, de, K_mat, interpret=interpret)
+        dK = paramspmm_with_vals(pcsr_t, _to_transpose(de), Q,
+                                 interpret=interpret)
+        dVf = paramspmm_with_vals(pcsr_t, _to_transpose(alpha), dOut,
+                                  interpret=interpret)
+        return dQ, dK, dVf
 
     f.defvjp(f_fwd, f_bwd)
     return f

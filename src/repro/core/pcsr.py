@@ -149,6 +149,35 @@ class PCSR:
             "vals": jnp.asarray(self.vals),
         }
 
+    def head_tiled(self, H: int):
+        """Steering arrays tiled for an H-head batch (cached per H).
+
+        Multi-head SDDMM/SpMM reuse the single-head kernels unchanged: the
+        chunk list is replicated H times with ``colidx`` offset by
+        ``h·n_cols`` (heads stacked along the gather source's row axis) and
+        ``trow`` offset by ``h·n_blocks`` (heads stacked along the output's
+        block axis).  One kernel call — and one compilation — covers every
+        head, instead of a per-head ``vmap`` over the unbatched kernel.
+        """
+        cache = self.__dict__.setdefault("_head_tiled_cache", {})
+        if H == 1:          # degenerate tiling — reuse the packed arrays
+            return {"colidx": self.colidx, "lrow": self.lrow,
+                    "trow": self.trow, "init": self.init, "vals": self.vals}
+        if H not in cache:
+            hh = np.arange(H, dtype=np.int64)
+            colidx = (np.tile(self.colidx, (H, 1))
+                      + (hh * self.n_cols)[:, None]).reshape(-1).astype(np.int32)
+            trow = (np.tile(self.trow, (H, 1))
+                    + (hh * self.n_blocks)[:, None]).reshape(-1).astype(np.int32)
+            cache[H] = {
+                "colidx": colidx,
+                "lrow": np.tile(self.lrow, H),
+                "trow": trow,
+                "init": np.tile(self.init, H),
+                "vals": np.tile(self.vals, (H, 1, 1)),
+            }
+        return cache[H]
+
 
 def _vectorize(indptr, indices, data, n_rows, n_cols, V):
     """Group nonzeros into V×1 panel vectors.
@@ -299,3 +328,58 @@ def transpose_csr(indptr, indices, data, n_rows, n_cols):
     t_counts = np.bincount(indices, minlength=n_cols)
     t_indptr = np.concatenate([[0], np.cumsum(t_counts)]).astype(np.int64)
     return t_indptr, rows[order], data[order], n_cols, n_rows
+
+
+def pcsr_slot_coords(p: PCSR):
+    """Dense coordinates of every *real* slot entry (stored value ≠ 0).
+
+    Returns ``(rows, cols, flat)`` — the (row, col) of each edge plus its
+    flat index into ``vals.reshape(-1)``, the (C, V, K) slot tensor order.
+    """
+    c, v, k = np.nonzero(p.vals)
+    ck = c * p.K + k
+    rows = (p.trow[c].astype(np.int64) * p.config.R
+            + p.lrow[ck].astype(np.int64) * p.config.V + v)
+    cols = p.colidx[ck].astype(np.int64)
+    flat = (c * p.config.V + v) * p.K + k
+    return rows, cols, flat
+
+
+def pcsr_to_coo(p: PCSR):
+    """Recover the (rows, cols, vals) edge list packed into a PCSR."""
+    rows, cols, flat = pcsr_slot_coords(p)
+    return rows, cols, p.vals.reshape(-1)[flat]
+
+
+def transpose_pcsr(p: PCSR, config: SpMMConfig | None = None) -> PCSR:
+    """PCSR of Aᵀ under the same (or a given) ⟨W,F,V,S⟩ configuration.
+
+    Built once from the forward PCSR's own edge list (no original CSR
+    needed) via ``transpose_csr``-style counting; used by the dedicated GAT
+    backward for the ``dK``/``dVf`` SpMMs.
+    """
+    rows, cols, vals = pcsr_to_coo(p)
+    order = np.lexsort((rows, cols))           # CSR of Aᵀ: sort by (col, row)
+    t_indptr = np.concatenate(
+        [[0], np.cumsum(np.bincount(cols, minlength=p.n_cols))]).astype(np.int64)
+    return build_pcsr(t_indptr, rows[order], vals[order],
+                      p.n_cols, p.n_rows, config or p.config)
+
+
+def slot_transfer_map(p: PCSR, p_t: PCSR):
+    """Flat-index pair moving per-edge slot values A-layout → Aᵀ-layout.
+
+    For each edge (i, j) of A, ``f_idx`` is its flat position in ``p``'s
+    (C, V, K) slot tensor and ``t_idx`` its flat position in ``p_t``'s —
+    so ``t.reshape(-1).at[t_idx].set(f.reshape(-1)[f_idx])`` re-lays a slot
+    tensor (e.g. softmaxed attention weights) onto the transpose PCSR.
+    Padding slots on either side are untouched (they stay zero).
+    """
+    rows, cols, f_flat = pcsr_slot_coords(p)
+    t_rows, t_cols, t_flat = pcsr_slot_coords(p_t)
+    key_f = rows * p.n_cols + cols
+    key_t = t_cols * p.n_cols + t_rows        # Aᵀ edge (j, i) ↔ A edge (i, j)
+    of, ot = np.argsort(key_f), np.argsort(key_t)
+    if not np.array_equal(key_f[of], key_t[ot]):
+        raise ValueError("PCSR pair does not pack the same edge set")
+    return f_flat[of].astype(np.int32), t_flat[ot].astype(np.int32)

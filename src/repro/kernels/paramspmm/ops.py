@@ -41,16 +41,49 @@ def paramspmm(pcsr: PCSR, B, *, interpret: bool = True):
     return paramspmm_with_vals(pcsr, None, B, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "H", "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "interpret"))
+def _call_heads(colidx, lrow, trow, init, vals, B, *, H, n_blocks, R, V, K,
+                dblk, n_rows, dim, interpret):
+    out = _call(colidx, lrow, trow, init,
+                vals.reshape((H * vals.shape[1],) + vals.shape[2:]),
+                B.reshape(H * B.shape[1], B.shape[2]),
+                n_blocks=H * n_blocks, R=R, V=V, K=K, dblk=dblk,
+                n_rows=H * n_blocks * R, dim=dim, interpret=interpret)
+    return out.reshape(H, n_blocks * R, dim)[:, :n_rows]
+
+
 def paramspmm_with_vals(pcsr: PCSR, vals, B, *, interpret: bool = True):
     """SpMM over A's *pattern* with per-slot values supplied at call time —
     the aggregation step of attention GNNs, where the PCSR topology is fixed
     but the edge weights (softmaxed SDDMM scores) change every step.
-    ``vals=None`` uses the values stored in the PCSR."""
-    arrs = pcsr.to_jax()
+    ``vals=None`` uses the values stored in the PCSR.
+
+    Multi-head: ``vals`` of shape (H, C, V, K) with ``B`` of shape
+    (H, n, d) run all heads in one kernel call over head-tiled steering
+    arrays (``PCSR.head_tiled``) and return (H, n_rows, d) — one
+    compilation for the whole head batch.
+    """
     cfg = pcsr.config
+    B = jnp.asarray(B)
+    if B.ndim == 3:                       # (H, n, d) head batch
+        H = B.shape[0]
+        t = pcsr.head_tiled(H)
+        if vals is None:                  # stored values, same for each head
+            vals = t["vals"].reshape(H, pcsr.num_chunks, cfg.V, pcsr.K)
+        vals = jnp.asarray(vals)
+        if vals.ndim != 4 or vals.shape[0] != H:
+            raise ValueError(f"multi-head vals must be (H={H}, C, V, K), "
+                             f"got {vals.shape}")
+        return _call_heads(t["colidx"], t["lrow"], t["trow"], t["init"],
+                           vals, B, H=H, n_blocks=pcsr.n_blocks, R=cfg.R,
+                           V=cfg.V, K=pcsr.K, dblk=cfg.dblk,
+                           n_rows=pcsr.n_rows, dim=B.shape[2],
+                           interpret=interpret)
+    arrs = pcsr.to_jax()
     return _call(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["init"],
                  arrs["vals"] if vals is None else jnp.asarray(vals),
-                 jnp.asarray(B),
+                 B,
                  n_blocks=pcsr.n_blocks, R=cfg.R, V=cfg.V, K=pcsr.K,
                  dblk=cfg.dblk, n_rows=pcsr.n_rows, dim=B.shape[1],
                  interpret=interpret)

@@ -29,6 +29,18 @@ machinery transfers unchanged:
 Slots padded during PCSR packing are masked post-kernel with
 ``vals != 0`` (matching the dense oracle's ``A ≠ 0`` sampling), so the
 edge-score tensor is exact whatever the padding ratio.
+
+Entry points
+------------
+``sddmm``          — raw masked scores (C, V, K); multi-head aware.
+``sddmm_softmax``  — fused GAT front half: scores → scale → LeakyReLU →
+  edge softmax, with the per-row max/normalizer accumulated *inside* the
+  kernel epilogue (flash-attention-style online rescale in the
+  VMEM-resident stats block) so split chunks of a row combine exactly and
+  only one elementwise normalize runs outside the kernel.
+Both accept ``(H, n, d)`` stacks and run every head through ONE kernel
+call over head-tiled steering arrays (``PCSR.head_tiled``) — one
+compilation for the whole head batch.
 """
-from .ops import sddmm
+from .ops import sddmm, sddmm_softmax
 from .ref import sddmm_dense_ref, sddmm_slots_ref

@@ -13,6 +13,14 @@ Block selection per step ``(c, k, j)``:
   Q block ``(V, Dblk)`` at panel ``trow[c]·W + lrow[c·K+k]`` — the paper's
   coalesced dense-row access; K block ``(1, Dblk)`` at ``colidx[c·K+k]`` —
   the one irregular gather, driven by scalar prefetch exactly as in SpMM.
+
+``sddmm_softmax_kernel`` extends the same traversal with a fused edge
+softmax epilogue: when a slot's dot product completes (its last dim tile),
+the score is masked, scaled, LeakyReLU'd, and folded into per-row online
+softmax statistics kept in two ``(n_blocks, R)`` outputs addressed by
+``trow[c]`` — the same consecutive-revisit trick, so with ``S=True`` a
+row split across chunks accumulates its max/normalizer exactly while the
+stats block is VMEM resident.
 """
 from __future__ import annotations
 
@@ -40,6 +48,114 @@ def _kernel(colidx_ref, lrow_ref, trow_ref,             # scalar prefetch
     kv = k_ref[0, :]                         # (Dblk,) gathered key row
     partial = jnp.sum(qv * kv[None, :], axis=1)          # (V,)
     out_ref[0, :, k] = out_ref[0, :, k] + partial
+
+
+def _fused_kernel(colidx_ref, lrow_ref, trow_ref, init_ref,   # scalar prefetch
+                  vals_ref, q_ref, k_ref,                     # VMEM inputs
+                  score_ref, rowmax_ref, rowsum_ref,          # VMEM outputs
+                  *, V: int, K: int, J: int, scale: float, slope: float):
+    c = pl.program_id(0)
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init_scores():
+        score_ref[...] = jnp.zeros_like(score_ref)
+
+    # first chunk of this output block → reset its softmax running stats
+    @pl.when((k == 0) & (j == 0) & (init_ref[c] == 1))
+    def _init_stats():
+        rowmax_ref[...] = jnp.full(rowmax_ref.shape, -jnp.inf,
+                                   rowmax_ref.dtype)
+        rowsum_ref[...] = jnp.zeros_like(rowsum_ref)
+
+    qv = q_ref[...]                          # (V, Dblk) query panel
+    kv = k_ref[0, :]                         # (Dblk,) gathered key row
+    acc = score_ref[0, :, k] + jnp.sum(qv * kv[None, :], axis=1)
+    score_ref[0, :, k] = acc
+
+    # Softmax epilogue: once the slot's dot product is complete (last dim
+    # tile), scale + LeakyReLU it and fold it into the block's running
+    # row-max / row-sum-of-exp (flash-attention-style online rescale).  The
+    # stats block lives at trow[c], so split chunks of one block accumulate
+    # into the same VMEM-resident (1, R) tiles across consecutive revisits.
+    @pl.when(j == J - 1)
+    def _epilogue():
+        m = vals_ref[0, :, k] != 0           # (V,) real-edge mask
+        x = acc * scale
+        x = jnp.where(x >= 0, x, slope * x)  # LeakyReLU
+        score_ref[0, :, k] = jnp.where(m, x, 0.0)
+        xm = jnp.where(m, x, -jnp.inf)       # padding never drives max/sum
+        row = lrow_ref[c * K + k] * V
+        m_old = rowmax_ref[0, pl.ds(row, V)]
+        s_old = rowsum_ref[0, pl.ds(row, V)]
+        m_new = jnp.maximum(m_old, xm)
+        finite = jnp.isfinite(m_new)         # rows with ≥1 real edge so far
+        s_scale = jnp.exp(jnp.where(finite, m_old - m_new, 0.0))
+        contrib = jnp.exp(jnp.where(finite, xm - m_new, -jnp.inf))
+        rowmax_ref[0, pl.ds(row, V)] = m_new
+        rowsum_ref[0, pl.ds(row, V)] = s_old * s_scale + contrib
+
+
+def sddmm_softmax_kernel(colidx, lrow, trow, init, vals, Q_padded, K_padded, *,
+                         n_blocks: int, W: int, V: int, K: int, dblk: int,
+                         scale: float, slope: float, interpret: bool = True):
+    """Fused SDDMM → edge-softmax statistics, one grid pass.
+
+    Same (C, K, J) traversal as ``sddmm_kernel``, plus an epilogue on each
+    slot's final dim tile that masks padding, applies ``scale`` and
+    LeakyReLU(``slope``), and maintains per-row online-softmax statistics in
+    two extra ``(n_blocks, R)`` outputs.  Returns
+    ``(logits (C, V, K), rowmax (n_blocks, R), rowsum (n_blocks, R))`` where
+    ``rowsum`` is Σ exp(logit − rowmax) over each row's real edges — the
+    normalizer the cheap elementwise epilogue in ops.py divides by.
+    Rows of never-visited (empty) blocks hold garbage; no real slot maps to
+    them, so callers gathering per-slot stats never read those entries.
+    """
+    C = trow.shape[0]
+    R = V * W
+    dim_pad = Q_padded.shape[1]
+    assert dim_pad % dblk == 0
+    assert Q_padded.shape[0] % V == 0
+    J = dim_pad // dblk
+    grid = (C, K, J)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            # whole chunk's vals (the edge mask); constant in k, j
+            pl.BlockSpec((1, V, K),
+                         lambda c, k, j, ci, lr, tr, it: (c, 0, 0)),
+            # query panel: V rows addressed by block·W + local panel index
+            pl.BlockSpec((V, dblk),
+                         lambda c, k, j, ci, lr, tr, it:
+                         (tr[c] * W + lr[c * K + k], j)),
+            # the gather: K row chosen by the scalar-prefetched colidx
+            pl.BlockSpec((1, dblk),
+                         lambda c, k, j, ci, lr, tr, it: (ci[c * K + k], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, V, K),
+                         lambda c, k, j, ci, lr, tr, it: (c, 0, 0)),
+            pl.BlockSpec((1, R),
+                         lambda c, k, j, ci, lr, tr, it: (tr[c], 0)),
+            pl.BlockSpec((1, R),
+                         lambda c, k, j, ci, lr, tr, it: (tr[c], 0)),
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_fused_kernel, V=V, K=K, J=J,
+                          scale=scale, slope=slope),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, V, K), Q_padded.dtype),
+            jax.ShapeDtypeStruct((n_blocks, R), Q_padded.dtype),
+            jax.ShapeDtypeStruct((n_blocks, R), Q_padded.dtype),
+        ],
+        interpret=interpret,
+        name=f"sddmm_softmax_v{V}_k{K}_w{W}_d{dblk}",
+    )
+    return fn(colidx, lrow, trow, init, vals, Q_padded, K_padded)
 
 
 def sddmm_kernel(colidx, lrow, trow, Q_padded, K_padded, *,

@@ -1,24 +1,43 @@
-"""Jit'd wrapper around the SDDMM Pallas kernel: padding, masking, and the
-high-level ``sddmm(pcsr, Q, K)`` entry point."""
+"""Jit'd wrappers around the SDDMM Pallas kernels.
+
+Two entry points, both multi-head aware (rank-3 ``(H, n, d)`` operands run
+every head in ONE kernel call over head-tiled PCSR steering arrays — see
+``PCSR.head_tiled`` — so multi-head GAT compiles once):
+
+* ``sddmm(pcsr, Q, K)`` — raw masked edge scores in slot layout;
+* ``sddmm_softmax(pcsr, Q, K)`` — the fused GAT attention front half:
+  scores → scale → LeakyReLU → edge softmax, with the row-max/normalizer
+  accumulated *inside* the kernel epilogue while the score block is VMEM
+  resident.  Only a cheap elementwise normalize runs outside the kernel,
+  cutting the HBM round-trips the unfused score→segment-softmax path paid.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.pcsr import PCSR
 from repro.kernels.paramspmm.ops import _pad_cols
 
 
+def _pad_q(Q, n_rows_pad: int, dblk: int):
+    """Pad a (..., n, d) query stack to (..., n_rows_pad, J·dblk) rows/lanes."""
+    Qp, _ = _pad_cols(Q.reshape(-1, Q.shape[-1]), dblk)
+    Qp = Qp.reshape(Q.shape[:-1] + (Qp.shape[-1],))
+    pad = [(0, 0)] * (Q.ndim - 2) + [(0, n_rows_pad - Q.shape[-2]), (0, 0)]
+    return jnp.pad(Qp, pad)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "n_blocks", "R", "W", "V", "K", "dblk", "interpret"))
-def _call(colidx, lrow, trow, vals, Q, K_mat, *, n_blocks, R, W, V, K, dblk,
-          interpret):
+    "H", "n_blocks", "R", "W", "V", "K", "dblk", "interpret"))
+def _call(colidx, lrow, trow, vals, Q, K_mat, *, H, n_blocks, R, W, V, K,
+          dblk, interpret):
     from .kernel import sddmm_kernel
-    Qp, _ = _pad_cols(Q, dblk)                   # zero rows/lanes add 0
-    Qp = jnp.pad(Qp, ((0, n_blocks * R - Qp.shape[0]), (0, 0)))
-    Kp, _ = _pad_cols(K_mat, dblk)
+    Qp = _pad_q(Q, n_blocks * R, dblk).reshape(H * n_blocks * R, -1)
+    Kp, _ = _pad_cols(K_mat.reshape(-1, K_mat.shape[-1]), dblk)
     scores = sddmm_kernel(colidx, lrow, trow, Qp, Kp,
                           W=W, V=V, K=K, dblk=dblk, interpret=interpret)
     # sampling mask: padding slots (and explicit zeros) score exactly 0,
@@ -27,10 +46,83 @@ def _call(colidx, lrow, trow, vals, Q, K_mat, *, n_blocks, R, W, V, K, dblk,
 
 
 def sddmm(pcsr: PCSR, Q, K, *, interpret: bool = True):
-    """E = (A≠0) ⊙ (Q·Kᵀ) in PCSR slot layout (C, V, K). Pallas path."""
-    arrs = pcsr.to_jax()
+    """E = (A≠0) ⊙ (Q·Kᵀ) in PCSR slot layout. Pallas path.
+
+    ``Q``/``K`` of shape (n, d) return (C, V, K) slots; (H, n, d) stacks
+    return (H, C, V, K) — all heads in a single head-tiled kernel call.
+    """
+    Q = jnp.asarray(Q)
+    K_mat = jnp.asarray(K)
+    single = Q.ndim == 2
+    if single:
+        Q, K_mat = Q[None], K_mat[None]
+    H = Q.shape[0]
+    t = pcsr.head_tiled(H)
     cfg = pcsr.config
-    return _call(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["vals"],
-                 jnp.asarray(Q), jnp.asarray(K),
-                 n_blocks=pcsr.n_blocks, R=cfg.R, W=cfg.W, V=cfg.V,
-                 K=pcsr.K, dblk=cfg.dblk, interpret=interpret)
+    scores = _call(t["colidx"], t["lrow"], t["trow"], t["vals"], Q, K_mat,
+                   H=H, n_blocks=pcsr.n_blocks, R=cfg.R, W=cfg.W, V=cfg.V,
+                   K=pcsr.K, dblk=cfg.dblk, interpret=interpret)
+    scores = scores.reshape(H, pcsr.num_chunks, cfg.V, pcsr.K)
+    return scores[0] if single else scores
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "H", "n_blocks", "R", "W", "V", "K", "dblk", "scale", "slope",
+    "interpret"))
+def _fused_call(colidx, lrow, trow, init, vals, Q, K_mat, *, H, n_blocks, R,
+                W, V, K, dblk, scale, slope, interpret):
+    from .kernel import sddmm_softmax_kernel
+    Qp = _pad_q(Q, n_blocks * R, dblk).reshape(H * n_blocks * R, -1)
+    Kp, _ = _pad_cols(K_mat.reshape(-1, K_mat.shape[-1]), dblk)
+    logits, rowmax, rowsum = sddmm_softmax_kernel(
+        colidx, lrow, trow, init, vals, Qp, Kp,
+        n_blocks=H * n_blocks, W=W, V=V, K=K, dblk=dblk,
+        scale=scale, slope=slope, interpret=interpret)
+    # cheap elementwise epilogue: slot → row stats gather + normalize.
+    # (The expensive parts — row max and Σexp — were computed online in the
+    # kernel; this is one exp and one divide per slot, no segment ops.)
+    C = trow.shape[0]
+    rows = (trow[:, None, None].astype(jnp.int32) * R
+            + lrow.reshape(C, 1, K) * V
+            + jnp.arange(V, dtype=jnp.int32)[None, :, None])
+    mask = vals != 0
+    rm = rowmax.reshape(-1)
+    rm = jnp.where(jnp.isfinite(rm), rm, 0.0)          # empty rows
+    denom = jnp.maximum(rowsum.reshape(-1), 1e-30)
+    ex = jnp.where(mask, jnp.exp(logits - rm[rows]), 0.0)
+    alpha = ex / denom[rows]
+    return alpha, logits
+
+
+def sddmm_softmax(pcsr: PCSR, Q, K, *, scale: float | None = None,
+                  slope: float = 0.2, interpret: bool = True,
+                  with_logits: bool = False):
+    """Fused GAT attention weights: softmax_row(LeakyReLU(scale·Q·Kᵀ)) on
+    A's sparsity pattern, in PCSR slot layout. Pallas path.
+
+    ``scale`` defaults to 1/√d (dot-product attention).  Returns ``alpha``
+    — or ``(alpha, logits)`` with ``with_logits=True``, where ``logits`` are
+    the masked post-LeakyReLU scores the backward needs for the activation
+    derivative.  Shapes follow ``sddmm``: (C, V, K) per (n, d) inputs,
+    (H, C, V, K) per (H, n, d).
+    """
+    Q = jnp.asarray(Q)
+    K_mat = jnp.asarray(K)
+    single = Q.ndim == 2
+    if single:
+        Q, K_mat = Q[None], K_mat[None]
+    H = Q.shape[0]
+    if scale is None:
+        scale = float(1.0 / np.sqrt(Q.shape[-1]))
+    t = pcsr.head_tiled(H)
+    cfg = pcsr.config
+    alpha, logits = _fused_call(
+        t["colidx"], t["lrow"], t["trow"], t["init"], t["vals"], Q, K_mat,
+        H=H, n_blocks=pcsr.n_blocks, R=cfg.R, W=cfg.W, V=cfg.V, K=pcsr.K,
+        dblk=cfg.dblk, scale=float(scale), slope=float(slope),
+        interpret=interpret)
+    shape = (H, pcsr.num_chunks, cfg.V, pcsr.K)
+    alpha, logits = alpha.reshape(shape), logits.reshape(shape)
+    if single:
+        alpha, logits = alpha[0], logits[0]
+    return (alpha, logits) if with_logits else alpha

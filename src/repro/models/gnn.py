@@ -69,30 +69,57 @@ def gin_forward(params, X, spmm):
 
 
 # -------------------------------------------------------------------- GAT
-def init_gat(key, layer_dims, att_dim: int | None = None):
+def init_gat(key, layer_dims, att_dim: int | None = None, heads: int = 1):
     """Dot-product attention GAT: per layer Wq/Wk project into the
-    attention space (att_dim, default = layer output dim), Wv transforms
-    the message features."""
+    attention space (att_dim per head, default = per-head output dim), Wv
+    transforms the message features.
+
+    Multi-head (``heads > 1``) follows the standard GAT scheme: hidden
+    layers concatenate the per-head outputs (layer dim must divide by
+    ``heads``), the final layer averages full-width heads.
+    """
     params = []
-    for i in range(len(layer_dims) - 1):
+    L = len(layer_dims) - 1
+    for i in range(L):
         key, kq, kk, kv = jax.random.split(key, 4)
-        da = att_dim or layer_dims[i + 1]
+        out = layer_dims[i + 1]
+        concat = heads > 1 and i < L - 1
+        if concat and out % heads:
+            raise ValueError(f"layer dim {out} not divisible by {heads} heads")
+        dv = out // heads if concat else out
+        da = att_dim or dv
         params.append({
-            "wq": _dense_init(kq, layer_dims[i], da),
-            "wk": _dense_init(kk, layer_dims[i], da),
-            "wv": _dense_init(kv, layer_dims[i], layer_dims[i + 1]),
-            "b": jnp.zeros(layer_dims[i + 1], jnp.float32),
+            "wq": _dense_init(kq, layer_dims[i], heads * da),
+            "wk": _dense_init(kk, layer_dims[i], heads * da),
+            "wv": _dense_init(kv, layer_dims[i], heads * dv),
+            "b": jnp.zeros(out, jnp.float32),
         })
     return params
 
 
-def gat_forward(params, X, gat_msg):
-    """h'_i = Σ_j α_ij · (h_j·Wv), α = softmax_j(LeakyReLU(q_i·k_j/√d))."""
+def gat_forward(params, X, gat_msg, heads: int = 1):
+    """h'_i = Σ_j α_ij · (h_j·Wv), α = softmax_j(LeakyReLU(q_i·k_j/√d)).
+
+    With ``heads > 1`` the projections are split into (H, n, d_head)
+    stacks and handed to ``gat_msg`` as one batch — the message fn (see
+    ``core.engine.make_gat_message_fn``) runs every head through a single
+    head-tiled kernel call, so the layer compiles once however many heads.
+    """
     h = X
+    L = len(params)
     for i, layer in enumerate(params):
         q, k, v = h @ layer["wq"], h @ layer["wk"], h @ layer["wv"]
-        h = gat_msg(q, k, v) + layer["b"]
-        if i < len(params) - 1:
+        if heads == 1:
+            h = gat_msg(q, k, v) + layer["b"]
+        else:
+            n = h.shape[0]
+            split = lambda m: m.reshape(n, heads, -1).transpose(1, 0, 2)
+            msg = gat_msg(split(q), split(k), split(v))    # (H, n, dv)
+            if i < L - 1:                                  # concat heads
+                h = msg.transpose(1, 0, 2).reshape(n, -1) + layer["b"]
+            else:                                          # average heads
+                h = msg.mean(axis=0) + layer["b"]
+        if i < L - 1:
             h = jax.nn.relu(h)
     return h
 

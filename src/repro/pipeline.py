@@ -22,6 +22,11 @@ class ParamSpMM:
     config resolution order: explicit ``config`` > ``decider`` prediction >
     cost-model oracle search (the fallback when no trained decider is at
     hand — e.g. first-run autotuning).
+
+    ``op`` names the operator the config is chosen for ("spmm", "sddmm",
+    or "gat" — the SDDMM+softmax+SpMM attention pair); it steers the
+    cost-model search only, since the decider is SpMM-trained (per-operator
+    decider labels remain a ROADMAP item).
     """
 
     def __init__(self, csr: CSRMatrix, dim: int, *,
@@ -31,7 +36,8 @@ class ParamSpMM:
                  backend: str = "engine",
                  interpret: bool = True,
                  build_transpose: bool = True,
-                 select: str = "model"):
+                 select: str = "model",
+                 op: str = "spmm"):
         self.perm = None
         if reorder:                       # paper §4.4: default preprocessing
             perm = rabbit_reorder(csr)
@@ -61,7 +67,7 @@ class ParamSpMM:
                 config = oracle_search(csr, dim, mode="measured",
                                        reps=2).best_config
             else:
-                config, _ = CostModel(csr).best(dim, config_space(dim))
+                config, _ = CostModel(csr).best(dim, config_space(dim), op=op)
         self.config = config
         self.op = ParamSpMMOperator(csr, config, backend=backend,
                                     interpret=interpret,

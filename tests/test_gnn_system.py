@@ -68,6 +68,21 @@ def test_gat_converges(task):
     assert r.losses[-1] < r.losses[0] * 0.5
 
 
+def test_gat_pallas_backend_trains_multihead():
+    """All-Pallas trainable GAT: fused SDDMM→softmax forward, dedicated
+    transpose-PCSR backward (no engine fallback — enforced by the
+    monkeypatch test in test_gat_fused.py), 2 heads in one kernel call."""
+    from repro.data.tasks import community_task
+    small = community_task(n_blocks=3, block_size=24, feat_dim=8,
+                           p_in=0.3, noise=0.5, seed=1)
+    r = train_gnn(small, model="gat", hidden=8, n_layers=2, steps=3,
+                  spmm_mode="paramspmm", lr=1e-2, heads=2,
+                  spmm_kwargs={"reorder": False, "backend": "pallas",
+                               "interpret": True})
+    assert np.isfinite(r.losses).all()
+    assert r.losses[-1] < r.losses[0]
+
+
 @pytest.mark.slow
 def test_gat_pallas_backend_trains():
     from repro.data.tasks import community_task
@@ -79,6 +94,14 @@ def test_gat_pallas_backend_trains():
                                "interpret": True})
     assert np.isfinite(r.losses).all()
     assert r.losses[-1] < r.losses[0]
+
+
+@pytest.mark.slow
+def test_gat_multihead_converges(task):
+    r = train_gnn(task, model="gat", hidden=32, n_layers=2, steps=60,
+                  spmm_mode="paramspmm", lr=5e-3, heads=4)
+    assert r.val_acc > 0.8
+    assert r.losses[-1] < r.losses[0] * 0.5
 
 
 def test_pipeline_reorder_consistency(task):
