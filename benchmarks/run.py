@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   fig5   — GCN/GIN end-to-end training            [paper Fig. 5]
   kernel — Pallas-kernel roofline terms           [§Roofline]
   sddmm  — SDDMM + fused GAT message timings      [attention extension]
+  dist   — partitioned SpMM scaling + per-shard   [distributed extension]
+           adaptive-config table
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_balancing, bench_blocking,
-                            bench_coarsening, bench_decider,
+                            bench_coarsening, bench_decider, bench_dist,
                             bench_gnn_train, bench_kernel, bench_reorder,
                             bench_sddmm, bench_speedups)
     from benchmarks.common import emit
@@ -40,6 +42,7 @@ def main(argv=None):
         "fig5": bench_gnn_train.run,
         "kernel": bench_kernel.run,
         "sddmm": bench_sddmm.run,
+        "dist": bench_dist.run,
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None

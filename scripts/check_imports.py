@@ -2,7 +2,9 @@
 """Compile-check: import every ``benchmarks/bench_*.py`` and
 ``examples/*.py`` module so refactors can't silently break the drivers
 (all of them keep module-level code import-safe behind ``main()`` /
-``__main__`` guards)."""
+``__main__`` guards), plus the subsystem packages whose import must stay
+device-independent (``repro.dist`` builds host-side plans on any
+backend; only executing them needs a mesh)."""
 from __future__ import annotations
 
 import importlib
@@ -15,8 +17,17 @@ sys.path.insert(0, str(ROOT))                    # the benchmarks package
 sys.path.insert(0, str(ROOT / "src"))            # repro
 
 
+PACKAGES = ["repro.core", "repro.dist", "repro.dist.partition",
+            "repro.dist.halo", "repro.dist.spmm"]
+
+
 def main() -> int:
     failures = []
+    for name in PACKAGES:
+        try:
+            importlib.import_module(name)
+        except Exception as e:                   # noqa: BLE001
+            failures.append((name, e))
     for path in sorted((ROOT / "benchmarks").glob("bench_*.py")):
         name = f"benchmarks.{path.stem}"
         try:

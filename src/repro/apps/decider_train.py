@@ -5,9 +5,16 @@ pricing at corpus scale (the TPU kernel is the deployment target — CPU
 wall-time can't see F), plus a measured-mode evaluation on a subset for
 validation.  Train/test split is BY GRAPH to avoid leakage (the paper's
 80/20 split of matrices).
+
+``--op {spmm,sddmm,gat}`` selects the operator the labels are priced
+for: the cost model's per-operator support (``CostModel.time(op=...)``)
+means one harness trains a per-operator decider — e.g. ``--op gat``
+labels each (graph, dim) with the config minimizing the fused
+SDDMM+softmax pass *plus* the SpMM aggregation pass.
 """
 from __future__ import annotations
 
+import argparse
 import time
 from dataclasses import dataclass, field
 
@@ -29,10 +36,11 @@ class DeciderDataset:
     times: dict                            # (gname, dim) -> {cfg: time}
     graph_names: list
     by_graph: dict                         # gname -> [sample indices]
+    op: str = "spmm"                       # operator the labels price
 
 
 def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
-                  verbose=False) -> DeciderDataset:
+                  op: str = "spmm", verbose=False) -> DeciderDataset:
     graphs = graphs if graphs is not None else corpus("bench")
     samples, times, by_graph = [], {}, {}
     for g in graphs:
@@ -40,14 +48,14 @@ def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
         feats = extract_features(g.csr)
         cm = CostModel(g.csr) if mode == "model" else None
         for dim in dims:
-            res = oracle_search(g.csr, dim, mode=mode, cm=cm)
+            res = oracle_search(g.csr, dim, mode=mode, cm=cm, op=op)
             samples.append((feats, dim, res.best_config))
             times[(g.name, dim)] = res.times
             by_graph.setdefault(g.name, []).append(len(samples) - 1)
         if verbose:
             print(f"  {g.name}: {time.time()-t0:.1f}s")
     return DeciderDataset(samples, times, [g.name for g in graphs],
-                          by_graph)
+                          by_graph, op)
 
 
 @dataclass
@@ -93,3 +101,40 @@ def train_eval(ds: DeciderDataset, *, test_frac=0.2, seed=0,
     allr = [x for v in per_dim.values() for x in v[1]]
     return DeciderEval(agg, float(np.mean(allp)), float(np.mean(allr)),
                        decider)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="Train + evaluate the "
+                                 "⟨W,F,V,S⟩ decider")
+    ap.add_argument("--op", default="spmm",
+                    choices=["spmm", "sddmm", "gat"],
+                    help="operator the oracle labels are collected for")
+    ap.add_argument("--mode", default="model",
+                    choices=["model", "measured"],
+                    help="label source: cost-model pricing or host timing")
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "bench"], help="graph corpus")
+    ap.add_argument("--dims", default=None,
+                    help="comma-separated embedding dims (default: paper "
+                    "sweep 16..256)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None,
+                    help="pickle the trained decider to this path")
+    args = ap.parse_args(argv)
+
+    dims = (tuple(int(d) for d in args.dims.split(","))
+            if args.dims else DIMS)
+    ds = build_dataset(corpus(args.scale), dims=dims, mode=args.mode,
+                       op=args.op, verbose=True)
+    ev = train_eval(ds, seed=args.seed)
+    print(f"op={args.op} mode={args.mode} graphs={len(ds.graph_names)}")
+    for d, (pred, rnd) in ev.per_dim.items():
+        print(f"  dim={d:4d}  pred_norm={pred:.3f}  random_norm={rnd:.3f}")
+    print(f"overall: pred={ev.overall_pred:.3f} random={ev.overall_rnd:.3f}")
+    if args.save:
+        ev.decider.save(args.save)
+        print(f"saved decider to {args.save}")
+
+
+if __name__ == "__main__":
+    main()

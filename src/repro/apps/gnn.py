@@ -1,9 +1,15 @@
 """GNN training application (paper §6.5): GCN/GIN/GAT on a
 node-classification task with ParamSpMM (or a baseline SpMM) as the
 aggregation operator.  GAT aggregates through the fused
-SDDMM→softmax→SpMM message function over the same PCSR."""
+SDDMM→softmax→SpMM message function over the same PCSR.
+
+``--partitions N`` (or ``train_gnn(partitions=N)``) swaps the
+single-device operator for the distributed one (``repro.dist``): the
+graph is row-partitioned over an N-device mesh and every shard runs its
+own cost-model-selected ⟨W,F,V,S⟩ configuration."""
 from __future__ import annotations
 
+import argparse
 import time
 from dataclasses import dataclass, field
 
@@ -26,12 +32,23 @@ class GNNTrainResult:
     losses: list = field(default_factory=list)
     val_acc: float = 0.0
     seconds_per_step: float = 0.0
-    config: SpMMConfig | None = None
+    config: SpMMConfig | list | None = None   # list = per-partition configs
 
 
-def build_spmm(task: NodeTask, dim: int, mode: str = "paramspmm", **kw):
-    """SpMM closure over Â (GCN-normalized adjacency). Returns (fn, perm)."""
+def build_spmm(task: NodeTask, dim: int, mode: str = "paramspmm", *,
+               partitions: int = 0, partition_strategy: str = "balanced",
+               **kw):
+    """SpMM closure over Â (GCN-normalized adjacency). Returns (fn, perm,
+    config).  ``partitions > 0`` builds the distributed operator instead
+    (no reorder — node ids must stay aligned with the partition map);
+    config is then the per-shard list."""
     csr = task.csr.gcn_normalize()
+    if partitions:
+        if mode != "paramspmm":
+            raise ValueError("partitioned execution needs mode='paramspmm'")
+        from repro.dist import DistGraph
+        g = DistGraph(csr, dim, partitions, strategy=partition_strategy, **kw)
+        return g, None, g.configs
     if mode == "paramspmm":
         p = ParamSpMM(csr, dim, **kw)
         return p, p.perm, p.config
@@ -45,6 +62,7 @@ def build_spmm(task: NodeTask, dim: int, mode: str = "paramspmm", **kw):
 def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
               n_layers: int = 5, steps: int = 100, lr: float = 5e-3,
               spmm_mode: str = "paramspmm", seed: int = 0, heads: int = 1,
+              partitions: int = 0, partition_strategy: str = "balanced",
               spmm_kwargs: dict | None = None) -> GNNTrainResult:
     kw = dict(spmm_kwargs or {})
     if model == "gat":
@@ -53,11 +71,14 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
                              "(spmm_mode='paramspmm')")
         # pick the config for the SDDMM+SpMM pair, not the SpMM alone
         kw.setdefault("op", "gat")
-        # engine backward is native autodiff; the Pallas backward runs its
-        # dK/dVf SpMMs on the operator's cached transpose PCSR
-        kw.setdefault("build_transpose",
-                      kw.get("backend", "engine") == "pallas")
-    spmm, perm, cfg = build_spmm(task, hidden, spmm_mode, **kw)
+        if not partitions:
+            # engine backward is native autodiff; the Pallas backward runs
+            # its dK/dVf SpMMs on the operator's cached transpose PCSR
+            kw.setdefault("build_transpose",
+                          kw.get("backend", "engine") == "pallas")
+    spmm, perm, cfg = build_spmm(task, hidden, spmm_mode,
+                                 partitions=partitions,
+                                 partition_strategy=partition_strategy, **kw)
     X = jnp.asarray(task.features)
     labels = jnp.asarray(task.labels)
     tmask = jnp.asarray(task.train_mask)
@@ -83,11 +104,16 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
         from repro.core.engine import make_gat_message_fn
         params = init_gat(key, dims, heads=heads)
         fwd = functools.partial(gat_forward, heads=heads)
-        # the message fn aggregates instead of the plain-SpMM closure,
-        # over the very same PCSR (+ transpose PCSR) the pipeline built
-        spmm = make_gat_message_fn(spmm.op.pcsr, spmm.op.pcsr_t,
-                                   backend=kw.get("backend", "engine"),
-                                   interpret=kw.get("interpret", True))
+        if partitions:
+            if heads != 1:
+                raise ValueError("distributed GAT is single-head")
+            spmm = spmm.gat_message        # DistGraph's sharded message fn
+        else:
+            # the message fn aggregates instead of the plain-SpMM closure,
+            # over the very same PCSR (+ transpose PCSR) the pipeline built
+            spmm = make_gat_message_fn(spmm.op.pcsr, spmm.op.pcsr_t,
+                                       backend=kw.get("backend", "engine"),
+                                       interpret=kw.get("interpret", True))
     else:
         raise ValueError(model)
 
@@ -115,3 +141,42 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
     logits = fwd(params, X, spmm)
     res.val_acc = float(accuracy(logits, labels, vmask))
     return res
+
+
+def main(argv=None):
+    from repro.data.tasks import community_task
+
+    ap = argparse.ArgumentParser(description="GNN training on a synthetic "
+                                 "node-classification task")
+    ap.add_argument("--model", default="gcn", choices=["gcn", "gin", "gat"])
+    ap.add_argument("--partitions", type=int, default=0,
+                    help="row-partition the graph over N mesh devices "
+                    "(0 = single-device)")
+    ap.add_argument("--partition-strategy", default="balanced",
+                    choices=["contiguous", "balanced"])
+    ap.add_argument("--spmm", default="paramspmm",
+                    choices=["paramspmm", "cusparse", "gespmm"])
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--heads", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    task = community_task(seed=args.seed)
+    res = train_gnn(task, model=args.model, hidden=args.hidden,
+                    n_layers=args.layers, steps=args.steps,
+                    spmm_mode=args.spmm, heads=args.heads, seed=args.seed,
+                    partitions=args.partitions,
+                    partition_strategy=args.partition_strategy)
+    print(f"val_acc={res.val_acc:.3f} "
+          f"ms_per_step={res.seconds_per_step * 1e3:.1f}")
+    cfgs = res.config if isinstance(res.config, list) else [res.config]
+    for i, c in enumerate(cfgs):
+        if c is not None:
+            w, f, v, s = c.astuple()
+            print(f"partition {i}: W={w} F={f} V={v} S={s}")
+
+
+if __name__ == "__main__":
+    main()

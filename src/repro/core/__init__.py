@@ -1,3 +1,24 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core ParamSpMM machinery: the PCSR data structure, configuration
+search (cost model / features / decider), and the sparse containers.
+
+The heavily-used names are re-exported here so downstream code imports
+``repro.core`` instead of deep-importing submodules.  Only numpy-level
+modules are pulled in eagerly — the JAX-importing layers (``engine``,
+``autotune``) stay behind explicit submodule imports to keep
+``import repro.core`` light.
+"""
+from .cost_model import CostBreakdown, CostModel, kernel_cost, sddmm_cost
+from .features import FEATURE_NAMES, MatrixFeatures, extract_features
+from .pcsr import (PCSR, PCSRStats, SpMMConfig, build_pcsr, config_space,
+                   pcsr_stats, pcsr_to_coo, slot_transfer_map,
+                   transpose_csr, transpose_pcsr)
+from .sparse import CSRMatrix
+
+__all__ = [
+    "CSRMatrix",
+    "PCSR", "PCSRStats", "SpMMConfig", "build_pcsr", "config_space",
+    "pcsr_stats", "pcsr_to_coo", "slot_transfer_map", "transpose_csr",
+    "transpose_pcsr",
+    "CostBreakdown", "CostModel", "kernel_cost", "sddmm_cost",
+    "FEATURE_NAMES", "MatrixFeatures", "extract_features",
+]

@@ -43,14 +43,22 @@ class OracleResult:
 
 def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
                   reps: int = 3, rng_seed: int = 0,
-                  cm: CostModel | None = None) -> OracleResult:
+                  cm: CostModel | None = None,
+                  op: str = "spmm") -> OracleResult:
+    """Exhaustive search of ``space`` for operator ``op`` ("spmm",
+    "sddmm", or "gat" — the SDDMM+softmax+SpMM attention pair, timed or
+    priced as the sum of its two passes)."""
+    if op not in ("spmm", "sddmm", "gat"):
+        raise ValueError(op)
     space = space or config_space(dim)
     times = {}
     if mode == "model":
         cm = cm or CostModel(csr)
         for cfg in space:
-            times[cfg] = cm.time(dim, cfg)
+            times[cfg] = cm.time(dim, cfg, op)
     elif mode == "measured":
+        from .engine import engine_sddmm
+
         rng = np.random.default_rng(rng_seed)
         for cfg in space:
             dim_pad = -(-dim // cfg.dblk) * cfg.dblk
@@ -58,7 +66,14 @@ def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
                             jnp.float32)
             pcsr = build_pcsr(csr.indptr, csr.indices, csr.data,
                               csr.n_rows, csr.n_cols, cfg)
-            times[cfg] = time_fn(engine_spmm, pcsr, B, reps=reps)
+            t = 0.0
+            if op in ("spmm", "gat"):
+                t += time_fn(engine_spmm, pcsr, B, reps=reps)
+            if op in ("sddmm", "gat"):
+                Q = jnp.asarray(rng.standard_normal((csr.n_rows, dim_pad)),
+                                jnp.float32)
+                t += time_fn(engine_sddmm, pcsr, Q, B, reps=reps)
+            times[cfg] = t
     else:
         raise ValueError(mode)
     best = min(times, key=times.get)

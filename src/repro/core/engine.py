@@ -101,6 +101,18 @@ def edge_softmax(scores, mask, rows, n_segments: int):
     return alpha.reshape(scores.shape)
 
 
+def attend_scores(scores, mask, rows, n_segments: int, *,
+                  dim_k: int, slope: float = 0.2):
+    """The GAT attention step shared by every backend: scale raw SDDMM
+    scores by 1/√d_k, LeakyReLU(slope), softmax over each destination
+    row's edge set.  Single source of truth — the single-device message
+    fn and the distributed per-shard branches (``repro.dist.spmm``) must
+    stay semantically identical."""
+    scaled = scores / jnp.sqrt(jnp.asarray(dim_k, scores.dtype))
+    scaled = jax.nn.leaky_relu(scaled, negative_slope=slope)
+    return edge_softmax(scaled, mask, rows, n_segments)
+
+
 def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
                         backend: str = "engine",
                         interpret: bool = True, slope: float = 0.2):
@@ -143,9 +155,8 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
     rows = _slot_rows(arrs["lrow"], arrs["trow"], V=V, R=R, K=K)
 
     def _attend(scores, Q):
-        scaled = scores / jnp.sqrt(jnp.asarray(Q.shape[1], scores.dtype))
-        scaled = jax.nn.leaky_relu(scaled, negative_slope=slope)
-        return edge_softmax(scaled, mask, rows, n_blocks * R)
+        return attend_scores(scores, mask, rows, n_blocks * R,
+                             dim_k=Q.shape[1], slope=slope)
 
     def engine_path(Q, K_mat, Vf):
         scores = _engine_sddmm(arrs["colidx"], arrs["lrow"], arrs["trow"],

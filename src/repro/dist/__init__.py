@@ -1,0 +1,24 @@
+"""Distributed graph-operator subsystem: partitioned PCSR + shard_map
+SpMM/GAT with per-partition adaptive ⟨W,F,V,S⟩ configurations.
+
+Layers (see docs/ARCHITECTURE.md §Distributed execution):
+
+* ``partition`` — 1D row partitioning (contiguous / balanced-nnz) into
+  per-shard local CSRs with compact halo column maps;
+* ``halo``      — compacted halo feature exchange (+ gradient
+  scatter-back) over the ``("parts",)`` device mesh;
+* ``spmm``      — ``DistGraph`` / ``dist_spmm`` / ``dist_gat_message``:
+  one SPMD ``shard_map`` program whose per-shard branches run the
+  existing engine/Pallas kernels under shard-specific configs.
+"""
+from .halo import HaloSpec, build_halo, halo_exchange, halo_scatter_back
+from .partition import (RowPartition, Shard, partition_bounds,
+                        partition_csr, unpartition_rows)
+from .spmm import DistGraph, dist_gat_message, dist_spmm, pack_shards
+
+__all__ = [
+    "RowPartition", "Shard", "partition_bounds", "partition_csr",
+    "unpartition_rows",
+    "HaloSpec", "build_halo", "halo_exchange", "halo_scatter_back",
+    "DistGraph", "dist_spmm", "dist_gat_message", "pack_shards",
+]

@@ -1,0 +1,125 @@
+"""Halo feature exchange over the partition mesh.
+
+A shard's SpMM/SDDMM gathers source-node rows it does not own.  Rather
+than all-gathering the full feature matrix (O(n·d) per device), the
+exchange is *compacted* on the host once per partition:
+
+* ``send_idx[q]`` — the local row positions shard ``q`` contributes: the
+  sorted union of every other shard's halo requests that ``q`` owns;
+* ``halo_src[p]`` — for each of shard ``p``'s halo columns, the flat
+  position of that row inside the all-gathered send buffer
+  ``(P · max_send, d)``.
+
+One ``all_gather`` of the packed send buffers per layer then serves both
+SpMM and SDDMM on that shard (the gathered rows are concatenated after
+the local block to form the extended column space the local PCSR
+indexes).  The reverse path — scattering halo *gradients* back to their
+owners — is the exact transpose: scatter-add into the flat buffer, a
+``psum_scatter`` down the mesh axis, and a local scatter-add at
+``send_idx``.
+
+Both directions are plain JAX inside ``shard_map`` bodies, so autodiff
+of a forward exchange materializes the reverse exchange automatically;
+``halo_scatter_back`` exists for explicit ``custom_vjp`` backwards (the
+distributed SpMM's transpose path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .partition import RowPartition
+
+
+@dataclass
+class HaloSpec:
+    """Host-side compact exchange plan (numpy; stacked per shard)."""
+
+    n_parts: int
+    max_send: int            # padded send-buffer rows per shard (≥ 1)
+    max_halo: int            # padded halo width per shard (= part.halo_pad)
+    send_idx: np.ndarray     # (P, max_send) int32 local rows to contribute
+    n_send: np.ndarray       # (P,) true send counts
+    halo_src: np.ndarray     # (P, max_halo) int32 flat gathered positions
+    n_halo: np.ndarray       # (P,) true halo counts
+
+    @property
+    def gathered_rows(self) -> int:
+        return self.n_parts * self.max_send
+
+
+def build_halo(part: RowPartition) -> HaloSpec:
+    """Compact send/recv maps from the partition's halo column lists."""
+    P = part.n_parts
+    requests = [s.halo_global for s in part.shards]
+    all_req = (np.unique(np.concatenate(requests))
+               if any(r.size for r in requests)
+               else np.zeros(0, np.int64))
+    owners = part.owner(all_req)
+    send_rows = [all_req[owners == q] for q in range(P)]  # sorted global ids
+    max_send = max(1, max((s.shape[0] for s in send_rows), default=1))
+
+    send_idx = np.zeros((P, max_send), np.int32)
+    n_send = np.zeros(P, np.int64)
+    for q in range(P):
+        k = send_rows[q].shape[0]
+        send_idx[q, :k] = send_rows[q] - part.starts[q]   # local positions
+        n_send[q] = k
+
+    halo_src = np.zeros((P, part.halo_pad), np.int32)
+    n_halo = np.zeros(P, np.int64)
+    for p in range(P):
+        halo = requests[p]
+        if halo.size:
+            own = part.owner(halo)
+            pos = np.empty(halo.shape[0], np.int64)
+            for q in range(P):
+                sel = own == q
+                if sel.any():
+                    # rank of each requested row in its owner's send list
+                    pos[sel] = (q * max_send
+                                + np.searchsorted(send_rows[q], halo[sel]))
+            halo_src[p, :halo.shape[0]] = pos
+        n_halo[p] = halo.shape[0]
+    return HaloSpec(P, max_send, part.halo_pad, send_idx, n_send,
+                    halo_src, n_halo)
+
+
+def halo_exchange(b_loc, send_idx_loc, halo_src_loc, *,
+                  axis_name: str = "parts"):
+    """Inside-``shard_map`` forward exchange: local features → halo rows.
+
+    b_loc (rows_pad, d); send_idx_loc (max_send,); halo_src_loc
+    (max_halo,) → (max_halo, d) rows of remote features, ready to
+    concatenate after the local block.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    send = jnp.take(b_loc, send_idx_loc, axis=0)
+    full = jax.lax.all_gather(send, axis_name, axis=0, tiled=True)
+    return jnp.take(full, halo_src_loc, axis=0)
+
+
+def halo_scatter_back(d_halo, send_idx_loc, halo_src_loc, *,
+                      n_parts: int, max_send: int, rows_pad: int,
+                      axis_name: str = "parts"):
+    """Inside-``shard_map`` reverse exchange: halo gradients → owners.
+
+    The transpose of ``halo_exchange``: d_halo (max_halo, d) scatters
+    into the flat gathered layout, ``psum_scatter`` hands every shard the
+    summed block for its own send rows, and a local scatter-add folds
+    them into a (rows_pad, d) gradient.  Padded halo entries carry zero
+    gradient (their extended columns have no edges) so their aliased
+    flat position 0 receives only zeros.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    d = d_halo.shape[-1]
+    buf = jnp.zeros((n_parts * max_send, d), d_halo.dtype)
+    buf = buf.at[halo_src_loc].add(d_halo)
+    own = jax.lax.psum_scatter(buf, axis_name, scatter_dimension=0,
+                               tiled=True)                 # (max_send, d)
+    return jnp.zeros((rows_pad, d), d_halo.dtype).at[send_idx_loc].add(own)

@@ -1,0 +1,364 @@
+"""Distributed SpMM / GAT message over a partitioned PCSR.
+
+``DistGraph`` turns one global adjacency into a mesh of per-shard PCSR
+operators: the rows are 1D-partitioned (``partition.py``), each shard's
+local CSR gets its *own* ⟨W,F,V,S⟩ configuration — chosen by
+``CostModel.best`` (or a trained decider) on that shard's features — and
+the per-shard packed arrays are padded to uniform shapes and sharded
+over a ``("parts",)`` device mesh.
+
+Execution is one SPMD ``shard_map`` program:
+
+1. **halo exchange** (``halo.py``) — one compacted ``all_gather`` brings
+   the remote source rows each shard needs; they concatenate after the
+   local feature block to form the extended column space the local PCSR
+   indexes.  SpMM and SDDMM on the shard reuse the same exchange.
+2. **per-shard compute** — ``lax.switch`` on ``axis_index("parts")``
+   dispatches to a per-partition branch closed over that shard's
+   *static* PCSR shapes (C, K, V, R, n_blocks), so partitions genuinely
+   run different configurations inside a single SPMD program.  Branches
+   call the existing engine traversal (pure JAX) or the Pallas kernel
+   (``backend="pallas"``).
+3. **``dist_spmm`` backward** — a ``custom_vjp`` whose backward runs the
+   per-shard *transpose* PCSR (``dB_ext = A_pᵀ·dC_p``) and scatters the
+   halo block of the gradient back to its owner shards through
+   ``halo_scatter_back`` (scatter → ``psum_scatter`` → local add), the
+   exact transpose of the forward exchange.
+
+``dist_gat_message`` runs SDDMM → LeakyReLU → edge softmax → SpMM per
+shard.  Row partitioning keeps every destination row's full edge set on
+one shard, so edge softmax needs no communication — only the K/Vf halo
+exchange (done once, jointly) crosses the mesh.  The engine path is
+natively differentiable; halo gradients flow back through the autodiff
+transpose of ``all_gather`` (a ``psum_scatter``), i.e. the same reverse
+path the explicit SpMM backward takes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CostModel, CSRMatrix, SpMMConfig, build_pcsr,
+                        config_space, extract_features)
+from repro.core.engine import (_engine, _engine_sddmm, _slot_rows,
+                               attend_scores)
+
+from .halo import HaloSpec, build_halo, halo_exchange, halo_scatter_back
+from .partition import RowPartition, partition_csr
+
+try:                                       # jax ≥ 0.6 top-level export
+    from jax import shard_map as _shard_map_raw
+except ImportError:                        # 0.4.x experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map_raw
+
+from jax.sharding import PartitionSpec
+
+AXIS = "parts"
+
+
+def _shard_map(f, mesh, n_in: int):
+    spec = PartitionSpec(AXIS, None)
+    kwargs = dict(mesh=mesh, in_specs=(spec,) * n_in, out_specs=spec)
+    try:
+        return _shard_map_raw(f, check_rep=False, **kwargs)
+    except TypeError:                      # newer jax dropped check_rep
+        return _shard_map_raw(f, **kwargs)
+
+
+# ------------------------------------------------------------- packing
+@dataclass
+class PackedShards:
+    """Per-shard PCSR steering arrays padded to uniform shapes and
+    stacked along a leading partition axis (device arrays)."""
+
+    pcsrs: list                  # per-shard PCSR (host; static shapes)
+    colidx: jnp.ndarray          # (P, S_max) int32
+    lrow: jnp.ndarray            # (P, S_max) int32
+    trow: jnp.ndarray            # (P, C_max) int32
+    init: jnp.ndarray            # (P, C_max) int32
+    vals: jnp.ndarray            # (P, VS_max) float32, flattened (C,V,K)
+
+
+def pack_shards(pcsrs) -> PackedShards:
+    P = len(pcsrs)
+    S = max(p.colidx.shape[0] for p in pcsrs)
+    C = max(p.num_chunks for p in pcsrs)
+    VS = max(p.vals.size for p in pcsrs)
+    colidx = np.zeros((P, S), np.int32)
+    lrow = np.zeros((P, S), np.int32)
+    trow = np.zeros((P, C), np.int32)
+    init = np.zeros((P, C), np.int32)
+    vals = np.zeros((P, VS), np.float32)
+    for i, p in enumerate(pcsrs):
+        colidx[i, :p.colidx.shape[0]] = p.colidx
+        lrow[i, :p.lrow.shape[0]] = p.lrow
+        trow[i, :p.num_chunks] = p.trow
+        init[i, :p.num_chunks] = p.init
+        vals[i, :p.vals.size] = p.vals.reshape(-1)
+    return PackedShards(list(pcsrs), *map(jnp.asarray,
+                                          (colidx, lrow, trow, init, vals)))
+
+
+def _spmm_branch(pcsr, *, n_out: int, backend: str, interpret: bool):
+    """Branch computing ``A_p · B_ext`` with shard-``p``-static shapes."""
+    cfg = pcsr.config
+    C, K, V, R, nb = pcsr.num_chunks, pcsr.K, cfg.V, cfg.R, pcsr.n_blocks
+    S, VS = C * K, C * V * K
+
+    if backend == "pallas":
+        from repro.kernels.paramspmm.ops import _call as _pallas_call
+
+        def branch(colidx, lrow, trow, init, vals, b_ext):
+            return _pallas_call(
+                colidx[:S], lrow[:S], trow[:C], init[:C],
+                vals[:VS].reshape(C, V, K), b_ext,
+                n_blocks=nb, R=R, V=V, K=K, dblk=cfg.dblk,
+                n_rows=n_out, dim=b_ext.shape[1], interpret=interpret)
+        return branch
+
+    def branch(colidx, lrow, trow, init, vals, b_ext):
+        return _engine(colidx[:S], lrow[:S], trow[:C],
+                       vals[:VS].reshape(C, V, K), b_ext,
+                       V=V, R=R, K=K, n_blocks=nb, n_rows=n_out)
+    return branch
+
+
+def _gat_branch(pcsr, *, n_out: int, slope: float):
+    """Branch computing the full per-shard attention message (engine)."""
+    cfg = pcsr.config
+    C, K, V, R, nb = pcsr.num_chunks, pcsr.K, cfg.V, cfg.R, pcsr.n_blocks
+    S, VS = C * K, C * V * K
+
+    def branch(colidx, lrow, trow, init, vals, q, k_ext, vf_ext):
+        ci, lr, tr = colidx[:S], lrow[:S], trow[:C]
+        vv = vals[:VS].reshape(C, V, K)
+        scores = _engine_sddmm(ci, lr, tr, vv, q, k_ext, V=V, R=R, K=K)
+        rows = _slot_rows(lr, tr, V=V, R=R, K=K)
+        alpha = attend_scores(scores, vv != 0, rows, nb * R,
+                              dim_k=q.shape[1], slope=slope)
+        return _engine(ci, lr, tr, alpha, vf_ext,
+                       V=V, R=R, K=K, n_blocks=nb, n_rows=n_out)
+    return branch
+
+
+# ----------------------------------------------------------- DistGraph
+class DistGraph:
+    """Partitioned graph operator: per-shard adaptive PCSR on a mesh.
+
+    Configuration resolution per shard: explicit ``configs`` (one or a
+    per-shard list) > ``decider`` prediction on the shard's features >
+    ``CostModel.best`` on the shard's local CSR with ``op`` pricing —
+    so a power-law graph's hub shard and tail shards pick *different*
+    ⟨W,F,V,S⟩, the cross-shard form of the paper's adaptivity claim.
+    """
+
+    def __init__(self, csr: CSRMatrix, dim: int, n_parts: int, *,
+                 strategy: str = "balanced",
+                 configs=None,
+                 decider=None,
+                 mesh=None,
+                 backend: str = "engine",
+                 interpret: bool = True,
+                 op: str = "spmm",
+                 max_f: int = 4):
+        self.csr = csr
+        self.dim = dim
+        self.backend = backend
+        self.interpret = interpret
+        self.part: RowPartition = partition_csr(csr, n_parts, strategy)
+        self.halo: HaloSpec = build_halo(self.part)
+        self._mesh = mesh                  # resolved lazily: the host-side
+        # plan (partition, configs, packing) needs no devices at all
+
+        space = config_space(dim, max_f)
+        self.predicted_times: list = []
+        if configs is None:
+            if decider is not None:
+                self.configs = [decider.predict(extract_features(s.csr), dim)
+                                for s in self.part.shards]
+            else:
+                self.configs = []
+                for s in self.part.shards:
+                    cfg, t = CostModel(s.csr).best(dim, space, op=op)
+                    self.configs.append(cfg)
+                    self.predicted_times.append(t)
+        elif isinstance(configs, SpMMConfig):
+            self.configs = [configs] * n_parts
+        else:
+            self.configs = list(configs)
+            if len(self.configs) != n_parts:
+                raise ValueError("configs list must have one entry per shard")
+
+        self._fwd = pack_shards(
+            [build_pcsr(s.csr.indptr, s.csr.indices, s.csr.data,
+                        s.csr.n_rows, s.csr.n_cols, cfg)
+             for s, cfg in zip(self.part.shards, self.configs)])
+        self._bwd_pack = None              # transpose PCSRs built on first
+        # backward only — forward-only / GAT (engine-autodiff) use skips it
+        self._send_idx = jnp.asarray(self.halo.send_idx)
+        self._halo_src = jnp.asarray(self.halo.halo_src)
+
+        # global ↔ padded-layout row maps
+        g = np.arange(self.part.n_global, dtype=np.int64)
+        pad_pos = self.part.pad_position(g)
+        n_pad = self.part.n_parts * self.part.rows_pad
+        pad_src = np.zeros(n_pad, np.int32)
+        pad_valid = np.zeros(n_pad, bool)
+        pad_src[pad_pos] = g
+        pad_valid[pad_pos] = True
+        self._pad_pos = jnp.asarray(pad_pos.astype(np.int32))
+        self._pad_src = jnp.asarray(pad_src)
+        self._pad_valid = jnp.asarray(pad_valid)
+
+        self._spmm_fn = None               # built lazily (first call) so a
+        self._gat_fns: dict = {}           # host-side plan needs no devices
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_partition_mesh
+            self._mesh = make_partition_mesh(self.part.n_parts)
+        return self._mesh
+
+    @property
+    def _bwd(self) -> PackedShards:
+        if self._bwd_pack is None:
+            bwd = []
+            for s, cfg in zip(self.part.shards, self.configs):
+                t = s.csr.transpose()      # (ext_cols, rows_pad)
+                bwd.append(build_pcsr(t.indptr, t.indices, t.data,
+                                      t.n_rows, t.n_cols, cfg))
+            self._bwd_pack = pack_shards(bwd)
+        return self._bwd_pack
+
+    # ---------------------------------------------------------- layout
+    def pad(self, x):
+        """(n_global, d) → (P·rows_pad, d) padded mesh layout."""
+        x = jnp.asarray(x)
+        return jnp.where(self._pad_valid[:, None],
+                         jnp.take(x, self._pad_src, axis=0), 0)
+
+    def unpad(self, x):
+        """(P·rows_pad, d) padded mesh layout → (n_global, d)."""
+        return jnp.take(x, self._pad_pos, axis=0)
+
+    # ------------------------------------------------------- operators
+    def spmm(self, B):
+        """C = A·B, distributed; (n_global, d) → (n_global, d)."""
+        if self._spmm_fn is None:
+            self._spmm_fn = _build_dist_spmm(self)
+        return self._spmm_fn(B)
+
+    __call__ = spmm
+
+    def gat_message(self, Q, K, Vf, *, slope: float = 0.2):
+        """Distributed GAT message (single-head, engine backend)."""
+        if jnp.ndim(Q) == 3:
+            raise NotImplementedError(
+                "dist_gat_message is single-head; vmap heads outside or "
+                "fold them into the feature dim")
+        if slope not in self._gat_fns:
+            self._gat_fns[slope] = _build_dist_gat(self, slope=slope)
+        return self._gat_fns[slope](Q, K, Vf)
+
+
+def _build_dist_spmm(g: DistGraph):
+    """The ``custom_vjp`` distributed SpMM closed over one DistGraph."""
+    rows_pad, ext = g.part.rows_pad, g.part.ext_cols
+    n_parts, max_send = g.halo.n_parts, g.halo.max_send
+    fwd_branches = [_spmm_branch(p, n_out=rows_pad, backend=g.backend,
+                                 interpret=g.interpret)
+                    for p in g._fwd.pcsrs]
+
+    def fwd_body(b, colidx, lrow, trow, init, vals, sidx, hsrc):
+        halo = halo_exchange(b, sidx[0], hsrc[0], axis_name=AXIS)
+        b_ext = jnp.concatenate([b, halo], axis=0)
+        i = jax.lax.axis_index(AXIS)
+        return jax.lax.switch(i, fwd_branches, colidx[0], lrow[0],
+                              trow[0], init[0], vals[0], b_ext)
+
+    fwd_sm = _shard_map(fwd_body, g.mesh, 8)
+    bwd_cache = []
+
+    def bwd_sm():
+        """Transpose-path shard_map, built on the first backward trace
+        (forward-only use never builds the transpose PCSRs)."""
+        if not bwd_cache:
+            bwd_branches = [_spmm_branch(p, n_out=ext, backend=g.backend,
+                                         interpret=g.interpret)
+                            for p in g._bwd.pcsrs]
+
+            def bwd_body(dc, colidx, lrow, trow, init, vals, sidx, hsrc):
+                i = jax.lax.axis_index(AXIS)
+                d_ext = jax.lax.switch(i, bwd_branches, colidx[0], lrow[0],
+                                       trow[0], init[0], vals[0], dc)
+                back = halo_scatter_back(d_ext[rows_pad:], sidx[0], hsrc[0],
+                                         n_parts=n_parts, max_send=max_send,
+                                         rows_pad=rows_pad, axis_name=AXIS)
+                return d_ext[:rows_pad] + back
+
+            bwd_cache.append(_shard_map(bwd_body, g.mesh, 8))
+        return bwd_cache[0]
+
+    def run_fwd(B):
+        out = fwd_sm(g.pad(B), g._fwd.colidx, g._fwd.lrow, g._fwd.trow,
+                     g._fwd.init, g._fwd.vals, g._send_idx, g._halo_src)
+        return g.unpad(out)
+
+    @jax.custom_vjp
+    def f(B):
+        return run_fwd(B)
+
+    def f_fwd(B):
+        return run_fwd(B), None
+
+    def f_bwd(_, dC):
+        dB = bwd_sm()(g.pad(dC), g._bwd.colidx, g._bwd.lrow, g._bwd.trow,
+                      g._bwd.init, g._bwd.vals, g._send_idx, g._halo_src)
+        return (g.unpad(dB),)
+
+    f.defvjp(f_fwd, f_bwd)
+    return jax.jit(f)          # cache the SPMD trace across training steps
+
+
+def _build_dist_gat(g: DistGraph, *, slope: float):
+    """Distributed attention message; K/Vf halo-exchanged jointly."""
+    rows_pad = g.part.rows_pad
+    branches = [_gat_branch(p, n_out=rows_pad, slope=slope)
+                for p in g._fwd.pcsrs]
+
+    def body(q, k, vf, colidx, lrow, trow, init, vals, sidx, hsrc):
+        dk = k.shape[1]
+        # one exchange serves both operands of the shard's SDDMM + SpMM
+        halo = halo_exchange(jnp.concatenate([k, vf], axis=1),
+                             sidx[0], hsrc[0], axis_name=AXIS)
+        k_ext = jnp.concatenate([k, halo[:, :dk]], axis=0)
+        vf_ext = jnp.concatenate([vf, halo[:, dk:]], axis=0)
+        i = jax.lax.axis_index(AXIS)
+        return jax.lax.switch(i, branches, colidx[0], lrow[0], trow[0],
+                              init[0], vals[0], q, k_ext, vf_ext)
+
+    sm = _shard_map(body, g.mesh, 10)
+
+    def f(Q, K, Vf):
+        out = sm(g.pad(Q), g.pad(K), g.pad(Vf),
+                 g._fwd.colidx, g._fwd.lrow, g._fwd.trow, g._fwd.init,
+                 g._fwd.vals, g._send_idx, g._halo_src)
+        return g.unpad(out)
+
+    return jax.jit(f)          # cache the SPMD trace across training steps
+
+
+# ------------------------------------------------------ functional API
+def dist_spmm(graph: DistGraph, B):
+    """C = A·B over a partitioned graph; (n, d) global in and out."""
+    return graph.spmm(B)
+
+
+def dist_gat_message(graph: DistGraph, Q, K, Vf, *, slope: float = 0.2):
+    """Distributed SDDMM → LeakyReLU → edge softmax → SpMM message."""
+    return graph.gat_message(Q, K, Vf, slope=slope)

@@ -11,6 +11,7 @@ CPU device; only ``dryrun.py`` forces 512 host devices.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def _axis_type_kwargs(n_axes: int) -> dict:
@@ -35,6 +36,19 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh(
         (n // model_parallel, model_parallel), ("data", "model"),
         **_axis_type_kwargs(2))
+
+
+def make_partition_mesh(n_parts: int):
+    """1D mesh over the first ``n_parts`` devices — the axis the
+    distributed graph subsystem (``repro.dist``) shards partitions along.
+    Kept separate from the data/model training meshes: graph partitions
+    are a *spatial* split of one sparse operator, not batch parallelism."""
+    devs = jax.devices()
+    if n_parts > len(devs):
+        raise ValueError(
+            f"{n_parts} partitions need {n_parts} devices, have {len(devs)} "
+            "(CPU: set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.sharding.Mesh(np.asarray(devs[:n_parts]), ("parts",))
 
 
 def data_axes(mesh) -> tuple:

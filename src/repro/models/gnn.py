@@ -7,6 +7,12 @@ paper does with its PyTorch extension.  GAT instead takes the fused
 message closure `msg: (Q, K, Vf) -> (n, d)` built by
 ``core.engine.make_gat_message_fn`` (SDDMM → softmax → SpMM over the
 same PCSR), mirroring HGL-proto's GSDDMM/GSPMM operator pair.
+
+The distributed operators plug into the same seams with global shapes:
+``repro.dist.DistGraph`` is a `(n, d) -> (n, d)` spmm closure and its
+``.gat_message`` a single-head message closure — the models never see
+the mesh, the partitioning, or the per-shard configs (`apps/gnn.py
+--partitions N` wires them in).
 """
 from __future__ import annotations
 

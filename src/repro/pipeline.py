@@ -7,13 +7,11 @@ from typing import Optional
 
 import numpy as np
 
+from .core import (CostModel, CSRMatrix, SpMMConfig, config_space,
+                   extract_features)
 from .core.decider import SpMMDecider
 from .core.engine import ParamSpMMOperator
-from .core.features import extract_features
-from .core.cost_model import CostModel
-from .core.pcsr import SpMMConfig, config_space
 from .core.reorder import rabbit_reorder, apply_reorder
-from .core.sparse import CSRMatrix
 
 
 class ParamSpMM:
@@ -45,7 +43,7 @@ class ParamSpMM:
             # keep whichever ordering has better V=2 locality — reordering
             # an already well-ordered graph (e.g. co-citation clones) can
             # only hurt, and the metric is cheap (pcsr_stats)
-            from .core.pcsr import pcsr_stats
+            from .core import pcsr_stats
             pr_old = pcsr_stats(csr.indptr, csr.indices, csr.n_rows,
                                 csr.n_cols, 2, 4).padding_ratio
             pr_new = pcsr_stats(cand.indptr, cand.indices, cand.n_rows,
