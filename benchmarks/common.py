@@ -43,3 +43,25 @@ def subset(graphs, max_nnz=300_000, k=12):
 
 def gflops(csr, dim, seconds):
     return throughput_gflops(csr, dim, seconds)
+
+
+def count_pallas_calls(fn):
+    """Run ``fn`` with the Pallas dispatch intercepted; return the kernel
+    names in launch order (trace-time count == launch count per call).
+    The ONE shared counter — `tests/test_fusion.py` asserts on it and
+    `bench_fusion` records it into BENCH_spmm.json, so the two can never
+    disagree about what counts as a kernel launch."""
+    from jax.experimental import pallas as pl
+    calls = []
+    orig = pl.pallas_call
+
+    def counting(*a, **kw):
+        calls.append(kw.get("name", "?"))
+        return orig(*a, **kw)
+
+    pl.pallas_call = counting
+    try:
+        jax.block_until_ready(fn())
+    finally:
+        pl.pallas_call = orig
+    return calls

@@ -12,10 +12,19 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   sddmm  — SDDMM + fused GAT message timings      [attention extension]
   dist   — partitioned SpMM scaling + per-shard   [distributed extension]
            adaptive-config table
+  fusion — kernel/elementwise-pass counts +       [fusion extension]
+           fused-vs-unfused pricing
+
+``--json [PATH]`` additionally writes the machine-readable
+``BENCH_spmm.json`` (default path): every emitted CSV row plus the
+fusion section's structured metrics (kernel counts, elementwise-pass
+counts, per-config fused/unfused times) — the perf-trajectory artifact
+CI archives from PR 4 on.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -23,13 +32,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark keys")
+    ap.add_argument("--json", nargs="?", const="BENCH_spmm.json",
+                    default=None, metavar="PATH",
+                    help="write BENCH_spmm.json (rows + fusion metrics)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_balancing, bench_blocking,
                             bench_coarsening, bench_decider, bench_dist,
-                            bench_gnn_train, bench_kernel, bench_reorder,
-                            bench_sddmm, bench_speedups)
-    from benchmarks.common import emit
+                            bench_fusion, bench_gnn_train, bench_kernel,
+                            bench_reorder, bench_sddmm, bench_speedups)
+    from benchmarks.common import ROWS, emit
 
     print("name,us_per_call,derived")
     jobs = {
@@ -43,9 +55,11 @@ def main(argv=None):
         "kernel": bench_kernel.run,
         "sddmm": bench_sddmm.run,
         "dist": bench_dist.run,
+        "fusion": bench_fusion.run,      # returns structured metrics
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None
+    extras = {}
     for key, fn in jobs.items():
         if key not in only:
             continue
@@ -54,9 +68,21 @@ def main(argv=None):
             decider = fn()
         elif key == "table4":
             bench_speedups.run(decider)
+        elif key == "fusion":
+            extras["fusion"] = fn()
         else:
             fn()
         emit(f"{key}/__elapsed", (time.time() - t0) * 1e6, "")
+
+    if args.json:
+        payload = {
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in ROWS],
+            **extras,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

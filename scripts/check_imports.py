@@ -18,7 +18,8 @@ sys.path.insert(0, str(ROOT / "src"))            # repro
 
 
 PACKAGES = ["repro.core", "repro.dist", "repro.dist.partition",
-            "repro.dist.halo", "repro.dist.spmm"]
+            "repro.dist.halo", "repro.dist.spmm",
+            "repro.kernels.paramspmm.ops", "repro.kernels.sddmm.ops"]
 
 
 def main() -> int:

@@ -19,4 +19,7 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 python -m compileall -q src
 python scripts/check_imports.py   # every bench_*/example module imports
 python scripts/check_docs.py      # README/docs symbol references resolve
+# perf-trajectory artifact: measured kernel/elementwise-pass counts for
+# the fused GNN hot path + fused-vs-unfused pricing (BENCH_spmm.json)
+python -m benchmarks.run --only fusion --json BENCH_spmm.json
 echo "ci: OK"

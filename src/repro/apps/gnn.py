@@ -63,15 +63,22 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
               n_layers: int = 5, steps: int = 100, lr: float = 5e-3,
               spmm_mode: str = "paramspmm", seed: int = 0, heads: int = 1,
               partitions: int = 0, partition_strategy: str = "balanced",
+              fused: bool = True,
               spmm_kwargs: dict | None = None) -> GNNTrainResult:
+    """``fused=True`` (default) lets GCN layers hand bias + ReLU to the
+    SpMM's fused epilogue (one kernel per aggregation on the Pallas
+    backend); ``fused=False`` keeps the classic ``spmm(h) @ W + b`` order
+    — bit-identical to the baseline backends, which never fuse."""
     kw = dict(spmm_kwargs or {})
     if model == "gat":
         if spmm_mode != "paramspmm":
             raise ValueError("gat needs the PCSR message fn "
                              "(spmm_mode='paramspmm')")
-        # pick the config for the SDDMM+SpMM pair, not the SpMM alone
+        # pick the config for the SDDMM+SpMM pair, not the SpMM alone —
+        # priced per head count (head tiling changes the optimal F)
         kw.setdefault("op", "gat")
         if not partitions:
+            kw.setdefault("heads", heads)
             # engine backward is native autodiff; the Pallas backward runs
             # its dK/dVf SpMMs on the operator's cached transpose PCSR
             kw.setdefault("build_transpose",
@@ -79,6 +86,9 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
     spmm, perm, cfg = build_spmm(task, hidden, spmm_mode,
                                  partitions=partitions,
                                  partition_strategy=partition_strategy, **kw)
+    if not fused and model != "gat" and hasattr(spmm, "fused"):
+        op = spmm                 # hide the fusion surface: plain closure
+        spmm = lambda B: op(B)    # → gcn/gin take the unfused branch
     X = jnp.asarray(task.features)
     labels = jnp.asarray(task.labels)
     tmask = jnp.asarray(task.train_mask)

@@ -7,7 +7,8 @@ modules are pulled in eagerly — the JAX-importing layers (``engine``,
 ``autotune``) stay behind explicit submodule imports to keep
 ``import repro.core`` light.
 """
-from .cost_model import CostBreakdown, CostModel, kernel_cost, sddmm_cost
+from .cost_model import (CostBreakdown, CostModel, kernel_cost, sddmm_cost,
+                         unfused_penalty)
 from .features import FEATURE_NAMES, MatrixFeatures, extract_features
 from .pcsr import (PCSR, PCSRStats, SpMMConfig, build_pcsr, config_space,
                    pcsr_stats, pcsr_to_coo, slot_transfer_map,
@@ -20,5 +21,6 @@ __all__ = [
     "pcsr_stats", "pcsr_to_coo", "slot_transfer_map", "transpose_csr",
     "transpose_pcsr",
     "CostBreakdown", "CostModel", "kernel_cost", "sddmm_cost",
+    "unfused_penalty",
     "FEATURE_NAMES", "MatrixFeatures", "extract_features",
 ]

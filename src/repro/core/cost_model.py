@@ -51,21 +51,46 @@ class CostBreakdown:
         return self.bytes_gather + self.bytes_meta + self.bytes_out
 
 
+def _head_dim(dim: int, heads: int) -> int:
+    """Per-head feature width: multi-head layers split ``dim`` across
+    heads (``gat_forward``), so head tiling runs H grids of d/H lanes."""
+    return max(1, -(-dim // heads))
+
+
 def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
-                dtype_bytes: int = DTYPE_BYTES) -> CostBreakdown:
-    """Price one SpMM under ⟨W,F,V,S⟩ given (V,W)-matched block stats."""
+                dtype_bytes: int = DTYPE_BYTES, *, heads: int = 1,
+                epilogue: bool = False) -> CostBreakdown:
+    """Price one SpMM under ⟨W,F,V,S⟩ given (V,W)-matched block stats.
+
+    ``heads > 1`` prices the head-tiled grid (``PCSR.steering(H)``): H× the
+    chunks and output blocks, each over the *per-head* dim ``ceil(dim/H)``
+    — which is what makes the optimum genuinely head-dependent: at H = 1 a
+    large F amortizes step overhead over full-width tiles, while at high H
+    the same F pads a narrow per-head dim up to Dblk lanes of mostly-dead
+    gather traffic.  ``epilogue=True`` adds the fused-epilogue operand
+    reads (per-row scale + per-feature bias — the applied math rides the
+    VMEM-resident block for free).
+    """
     assert stats.V == config.V and stats.W == config.W
     C, K, slots = stats.chunks_and_slots(config.S)
     dblk = config.dblk
-    J = -(-dim // dblk)
+    d_head = _head_dim(dim, heads)
+    J = -(-d_head // dblk)
+    C *= heads
+    n_blocks = stats.n_nonempty_blocks * heads
     steps = J * C * K
     # B-row gathers: one (1, Dblk) tile per step
     bytes_gather = steps * dblk * dtype_bytes
     # per-chunk metadata (vals block + colidx/lrow/trow scalars), per j pass
     bytes_meta = J * C * K * (config.V * 4 + 4 + 4)
     # output blocks written once per (j, block) — revisits stay in VMEM
-    bytes_out = J * stats.n_nonempty_blocks * config.R * dblk * dtype_bytes
+    bytes_out = J * n_blocks * config.R * dblk * dtype_bytes
     flops = 2.0 * steps * config.V * dblk
+    if epilogue:
+        # scale (R,) per block + bias (Dblk,) per (block, j): tiny reads
+        bytes_meta += (n_blocks * config.R + J * n_blocks * dblk
+                       ) * dtype_bytes
+        flops += 3.0 * n_blocks * config.R * d_head
     return CostBreakdown(
         t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
         t_compute=flops / VPU_FLOPS,
@@ -75,7 +100,8 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
 
 
 def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
-               dtype_bytes: int = DTYPE_BYTES) -> CostBreakdown:
+               dtype_bytes: int = DTYPE_BYTES, *,
+               heads: int = 1) -> CostBreakdown:
     """Price one fused SDDMM(+softmax epilogue) under ⟨W,F,V,S⟩.
 
     SDDMM is *reduction*-bound where SpMM is scatter-bound: every grid step
@@ -85,11 +111,16 @@ def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     still scales with dim (the dot products), so large-F configs trade the
     panel re-reads against MAC-job gap exactly as the paper's coarsening
     analysis predicts — just with the output-traffic term ~absent.
+    ``heads`` prices the head-tiled grid over the per-head dim, as in
+    ``kernel_cost``.
     """
     assert stats.V == config.V and stats.W == config.W
     C, K, slots = stats.chunks_and_slots(config.S)
     dblk = config.dblk
-    J = -(-dim // dblk)
+    d_head = _head_dim(dim, heads)
+    J = -(-d_head // dblk)
+    C *= heads
+    n_blocks = stats.n_nonempty_blocks * heads
     steps = J * C * K
     # per step: the key-row gather (1, Dblk) + the query panel (V, Dblk)
     bytes_gather = steps * (1 + config.V) * dblk * dtype_bytes
@@ -97,7 +128,7 @@ def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     bytes_meta = C * K * 8 + C * 8 + C * config.V * K * dtype_bytes
     # scores written once per slot; online-softmax stats once per block
     bytes_out = (C * config.V * K
-                 + 2 * stats.n_nonempty_blocks * config.R) * dtype_bytes
+                 + 2 * n_blocks * config.R) * dtype_bytes
     # dot-product MACs + the ~8-op exp/max epilogue per slot row
     flops = 2.0 * steps * config.V * dblk + 8.0 * C * K * config.V
     return CostBreakdown(
@@ -108,6 +139,32 @@ def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
         flops=flops, steps=steps)
 
 
+def unfused_penalty(stats: PCSRStats, dim: int, config: SpMMConfig,
+                    op: str, dtype_bytes: int = DTYPE_BYTES, *,
+                    heads: int = 1) -> float:
+    """Extra seconds the *unfused* pipeline pays vs the fused one — the
+    HBM round-trips of the interstitial elementwise passes the fusion
+    layer eliminates.  This is the "saved bytes" term that lets the
+    decider treat fusion as a config dimension.
+
+    op="gat": the softmax-normalize pass between SDDMM and SpMM —
+      read logits + gathered row stats, write α, then the SpMM re-reads α
+      instead of logits (a wash), ≈ 3 slot-tensor traversals + the α
+      residual write the recompute backward also avoids.
+    op="spmm": the separate degree-norm/bias/activation pass(es) over the
+      (n, d) output — one read + one write of the full output (XLA fuses
+      the elementwise chain into a single pass, so that is what we price).
+    """
+    C, K, slots = stats.chunks_and_slots(config.S)
+    if op == "gat":
+        slot_bytes = heads * C * config.V * K * dtype_bytes
+        return 3.0 * slot_bytes / HBM_BW
+    if op == "spmm":
+        out_bytes = heads * stats.n_rows * _head_dim(dim, heads) * dtype_bytes
+        return 2.0 * out_bytes / HBM_BW
+    raise ValueError(f"no fusion penalty for op={op!r}")
+
+
 class CostModel:
     """Caches per-(V,W) stats for one matrix; prices any config × dim.
 
@@ -116,6 +173,13 @@ class CostModel:
     attention message pipeline, priced as one fused SDDMM+softmax pass plus
     one SpMM aggregation pass, so ``best(..., op="gat")`` picks the config
     minimizing the *pair*, not the SpMM alone.
+
+    ``H`` prices the head-tiled grids over the per-head dim (multi-head
+    configs are per-H: high H shrinks the useful lane width, so the
+    optimal F — and sometimes V/S — genuinely changes with head count).
+    ``fused=False`` adds the interstitial elementwise passes the fusion
+    layer removes (``unfused_penalty``), so fused-vs-unfused is a priced
+    dimension of the search space, not an assumption.
     """
 
     def __init__(self, csr: CSRMatrix):
@@ -129,26 +193,48 @@ class CostModel:
                                           self.csr.n_rows, self.csr.n_cols, V, W)
         return self._stats[key]
 
-    def cost(self, dim: int, config: SpMMConfig,
-             op: str = "spmm") -> CostBreakdown:
+    def cost(self, dim: int, config: SpMMConfig, op: str = "spmm", *,
+             H: int = 1, epilogue: bool = False) -> CostBreakdown:
         st = self.stats(config.V, config.W)
         if op == "spmm":
-            return kernel_cost(st, dim, config)
+            return kernel_cost(st, dim, config, heads=H, epilogue=epilogue)
         if op == "sddmm":
-            return sddmm_cost(st, dim, config)
+            return sddmm_cost(st, dim, config, heads=H)
         raise ValueError(f"no single-kernel breakdown for op={op!r}")
 
-    def time(self, dim: int, config: SpMMConfig, op: str = "spmm") -> float:
+    def time(self, dim: int, config: SpMMConfig, op: str = "spmm", *,
+             H: int = 1, fused: bool = True,
+             epilogue: bool = False) -> float:
+        """``epilogue=True`` prices a fused-epilogue SpMM (the extra
+        scale/bias operand reads); with ``fused=False`` those post-ops run
+        as separate passes instead, so the kernel is priced epilogue-free
+        and the interstitial-pass penalty is added — the two sides of the
+        comparison ``fusion_savings`` takes."""
         if op == "gat":
-            return (self.cost(dim, config, "sddmm").total
-                    + self.cost(dim, config, "spmm").total)
-        return self.cost(dim, config, op).total
+            t = (self.cost(dim, config, "sddmm", H=H).total
+                 + self.cost(dim, config, "spmm", H=H).total)
+        else:
+            t = self.cost(dim, config, op, H=H,
+                          epilogue=epilogue and fused).total
+        if not fused and op in ("gat", "spmm"):
+            t += unfused_penalty(self.stats(config.V, config.W), dim,
+                                 config, op, heads=H)
+        return t
 
-    def best(self, dim: int, space,
-             op: str = "spmm") -> tuple[SpMMConfig, float]:
+    def fusion_savings(self, dim: int, config: SpMMConfig,
+                       op: str = "gat", *, H: int = 1) -> float:
+        """Seconds the fused pipeline saves over the unfused one — for
+        op="spmm" the fused side pays the epilogue operand reads, the
+        unfused side the separate elementwise passes."""
+        return (self.time(dim, config, op, H=H, fused=False)
+                - self.time(dim, config, op, H=H, fused=True,
+                            epilogue=op == "spmm"))
+
+    def best(self, dim: int, space, op: str = "spmm", *, H: int = 1,
+             fused: bool = True) -> tuple[SpMMConfig, float]:
         best_cfg, best_t = None, np.inf
         for cfg in space:
-            t = self.time(dim, cfg, op)
+            t = self.time(dim, cfg, op, H=H, fused=fused)
             if t < best_t:
                 best_cfg, best_t = cfg, t
         return best_cfg, best_t

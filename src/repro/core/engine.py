@@ -129,12 +129,21 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
 
     * ``"engine"`` — the pure-JAX path, returned as-is: natively
       differentiable, no ``custom_vjp`` required.
-    * ``"pallas"`` — forward runs the *fused* SDDMM→softmax kernel
-      (``kernels.sddmm.ops.sddmm_softmax``: row max/normalizer accumulated
-      in the kernel epilogue while the score block is VMEM resident)
-      followed by the SpMM aggregation kernel.  The backward is a dedicated
-      all-Pallas pipeline — no engine fallback:
+    * ``"pallas"`` — the **two-kernel forward**: the fused SDDMM→softmax
+      kernel (``sddmm_softmax_stats``: row max/normalizer accumulated in
+      the kernel epilogue while the score block is VMEM resident) hands
+      (logits, rowmax, rowsum) straight to the SpMM kernel's softmax
+      *prologue* (``paramspmm_with_vals(stats=...)``), which rebuilds
+      α = exp(logit − max)/Σ in-register while loading vals — NO
+      interstitial elementwise pass and α is never materialized in HBM.
 
+      The backward is flash-style recompute: residuals are only the raw
+      logits + the two (n_blocks, R) row-stat vectors — the (C, V, K) α
+      residual is dropped and α is recomputed from the stats where the
+      vjp needs it.  The pipeline is dedicated all-Pallas — no engine
+      fallback:
+
+        α   = exp(logits − rowmax)/rowsum       (recompute, no residual)
         dα  = SDDMM(pcsr, dOut, Vf)            (dα_ij = dOut_i·Vf_j)
         dx  = α ⊙ (dα − Σ_row α·dα)            (softmax vjp, per-slot)
         de  = dx · scale · LeakyReLU'(x)        (activation chain)
@@ -174,7 +183,9 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
         return engine_fn            # natively differentiable, no vjp needed
 
     from repro.kernels.paramspmm.ops import paramspmm_with_vals
-    from repro.kernels.sddmm.ops import sddmm as _sddmm_call, sddmm_softmax
+    from repro.kernels.sddmm.ops import (normalize_from_stats,
+                                         sddmm as _sddmm_call,
+                                         sddmm_softmax_stats)
 
     from .pcsr import slot_transfer_map, transpose_pcsr
     if pcsr_t is None:
@@ -196,11 +207,26 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
                                 num_segments=n_blocks * R)
         return s[flat_rows].reshape(x.shape)
 
+    def _alpha_1h(logits, rowmax, rowsum):
+        """Flash-style α recompute from the stats residuals (one head) —
+        the single normalize implementation shared with sddmm/ops, so the
+        masked-slot/empty-row guard convention cannot drift."""
+        return normalize_from_stats(logits, rowmax, rowsum, arrs["lrow"],
+                                    arrs["trow"], R=R, V=V, K=K)
+
+    def _alpha(logits, rowmax, rowsum):
+        if logits.ndim == 4:                            # (H, C, V, K)
+            H = logits.shape[0]
+            return jax.vmap(_alpha_1h)(logits, rowmax.reshape(H, -1, R),
+                                       rowsum.reshape(H, -1, R))
+        return _alpha_1h(logits, rowmax, rowsum)
+
     def fwd_path(Q, K_mat, Vf):
-        alpha, logits = sddmm_softmax(pcsr, Q, K_mat, slope=slope,
-                                      interpret=interpret, with_logits=True)
-        out = paramspmm_with_vals(pcsr, alpha, Vf, interpret=interpret)
-        return out, (Q, K_mat, Vf, alpha, logits)
+        logits, rowmax, rowsum = sddmm_softmax_stats(
+            pcsr, Q, K_mat, slope=slope, interpret=interpret)
+        out = paramspmm_with_vals(pcsr, logits, Vf, stats=(rowmax, rowsum),
+                                  interpret=interpret)
+        return out, (Q, K_mat, Vf, logits, rowmax, rowsum)
 
     @jax.custom_vjp
     def f(Q, K_mat, Vf):
@@ -210,13 +236,15 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
         return fwd_path(Q, K_mat, Vf)
 
     def f_bwd(res, dOut):
-        Q, K_mat, Vf, alpha, logits = res
+        Q, K_mat, Vf, logits, rowmax, rowsum = res
+        alpha = _alpha(logits, rowmax, rowsum)          # recompute, cheap
         scale = 1.0 / jnp.sqrt(jnp.asarray(Q.shape[-1], dOut.dtype))
         dalpha = _sddmm_call(pcsr, dOut, Vf, interpret=interpret)
         rsum = (jax.vmap(_rowsum) if alpha.ndim == 4 else _rowsum)
         dx = alpha * (dalpha - rsum(alpha * dalpha))       # softmax vjp
         # LeakyReLU' from the saved logits: LeakyReLU preserves sign, so
-        # sign(logits) = sign(pre-activation); masked slots have dx = 0.
+        # sign(logits) = sign(pre-activation); masked slots (logit −inf)
+        # have dx = 0, so the slope branch they fall into is inert.
         de = dx * scale * jnp.where(logits >= 0, 1.0, slope)
         dQ = paramspmm_with_vals(pcsr, de, K_mat, interpret=interpret)
         dK = paramspmm_with_vals(pcsr_t, _to_transpose(de), Q,
@@ -266,9 +294,138 @@ def make_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
     return f
 
 
+def apply_epilogue(out, scale=None, bias=None, activation: str = "none",
+                   slope: float = 0.2):
+    """The SpMM epilogue semantics, in plain JAX:
+    ``act(scale[:, None] ⊙ out + bias[None, :])``.  Single source of truth
+    for what the Pallas kernel's fused epilogue computes — the engine
+    backend and the per-shard distributed branches run this (XLA fuses it
+    into the surrounding program), the Pallas kernel applies the same ops
+    to the VMEM-resident output block before write-back."""
+    if scale is not None:
+        out = out * scale[:, None]
+    if bias is not None:
+        out = out + bias[None, :]
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation == "leaky_relu":
+        out = jax.nn.leaky_relu(out, negative_slope=slope)
+    elif activation != "none":
+        raise ValueError(f"unknown epilogue activation {activation!r}")
+    return out
+
+
+def epilogue_grad(out, dOut, activation: str = "none", slope: float = 0.2):
+    """d(pre-activation) of the fused epilogue from its *output*: both
+    relu and leaky_relu preserve sign, so act' is recoverable from ``out``
+    alone.  The one backward for ``apply_epilogue``'s activations — the
+    single-device and distributed fused custom_vjps both call this, so
+    the derivative (and the slope constant) cannot drift between them."""
+    if activation == "relu":
+        return jnp.where(out > 0, dOut, 0.0)
+    if activation == "leaky_relu":
+        return jnp.where(out >= 0, dOut, slope * dOut)
+    if activation != "none":
+        raise ValueError(f"unknown epilogue activation {activation!r}")
+    return dOut
+
+
+def engine_spmm_fused(pcsr: PCSR, B, *, scale=None, bias=None,
+                      activation: str = "none"):
+    """act(scale ⊙ (A·B) + bias) on the jit'd JAX engine — the reference
+    semantics of the fused-epilogue kernel, natively differentiable."""
+    return apply_epilogue(engine_spmm(pcsr, B), scale, bias, activation)
+
+
+def make_fused_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
+                       backend: str = "engine", interpret: bool = True):
+    """Build the epilogue-fused aggregation closure
+    ``fused(B, scale=None, bias=None, activation="none") -> (n, d)``
+    computing ``act(scale ⊙ (A·B) + bias)`` — one kernel on the Pallas
+    backend (scale/bias/activation applied to the VMEM-resident output
+    block on its last visit) instead of kernel + 2–3 XLA elementwise
+    passes over the (n, d) output.
+
+    Differentiable in ``B`` and ``bias`` (``scale`` is graph data — degree
+    norms — and is treated as a constant): with ``pcsr_t`` both backends
+    run a ``custom_vjp`` whose backward is
+
+        dpre  = dOut ⊙ act'(out)          (act' recovered from out: both
+                                           relu and leaky_relu preserve sign)
+        dbias = Σ_rows dpre
+        dB    = SpMM(pcsrᵀ, scale ⊙ dpre)  (transpose-PCSR SpMM)
+
+    — the same transpose path the plain ``make_spmm_fn`` takes, so fusing
+    never swaps the optimized backward for a generic scatter transpose.
+    Without ``pcsr_t`` the engine path falls back to native autodiff; the
+    Pallas path requires it for gradients.
+    """
+    if backend == "pallas":
+        from repro.kernels.paramspmm.ops import paramspmm
+
+        def fwd_call(B, scale, bias, activation):
+            return paramspmm(pcsr, B, scale=scale, bias=bias,
+                             activation=activation, interpret=interpret)
+
+        def bwd_call(dC):
+            return paramspmm(pcsr_t, dC, interpret=interpret)
+    else:
+        def fwd_call(B, scale, bias, activation):
+            return engine_spmm_fused(pcsr, B, scale=scale, bias=bias,
+                                     activation=activation)
+
+        def bwd_call(dC):
+            return engine_spmm(pcsr_t, dC)
+
+    if backend != "pallas" and pcsr_t is None:
+        def fused(B, scale=None, bias=None, activation: str = "none"):
+            return fwd_call(B, scale, bias, activation)  # native autodiff
+        return fused
+
+    vjps: dict = {}                # one custom_vjp per activation
+
+    def _vjp(activation: str):
+        # scale/bias enter as primals (None stays a None pytree leaf) so a
+        # traced scale never leaks into the vjp closure; scale's cotangent
+        # is zero — degree norms are graph data, not a trained parameter.
+        @jax.custom_vjp
+        def f(B, scale, bias):
+            return fwd_call(B, scale, bias, activation)
+
+        def f_fwd(B, scale, bias):
+            out = fwd_call(B, scale, bias, activation)
+            return out, (out, scale, bias)
+
+        def f_bwd(res, dOut):
+            out, scale, bias = res
+            if pcsr_t is None:
+                raise ValueError("fused SpMM backward needs the transpose "
+                                 "PCSR — build the operator with "
+                                 "build_transpose=True")
+            dpre = epilogue_grad(out, dOut, activation)
+            dbias = None if bias is None else dpre.sum(axis=0)
+            dcb = dpre if scale is None else dpre * scale[:, None]
+            dB = bwd_call(dcb)
+            dscale = None if scale is None else jnp.zeros_like(scale)
+            return dB, dscale, dbias
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    def fused(B, scale=None, bias=None, activation: str = "none"):
+        if activation not in vjps:
+            vjps[activation] = _vjp(activation)
+        return vjps[activation](
+            B, None if scale is None else jnp.asarray(scale),
+            None if bias is None else jnp.asarray(bias))
+    return fused
+
+
 class ParamSpMMOperator:
     """User-facing operator: holds forward + transpose PCSR for one sparse
-    matrix under one ⟨W,F,V,S⟩ configuration."""
+    matrix under one ⟨W,F,V,S⟩ configuration.  ``op(B)`` is the plain
+    SpMM; ``op.fused(B, scale=, bias=, activation=)`` the epilogue-fused
+    aggregation (one kernel per GCN layer on the Pallas backend)."""
 
     def __init__(self, csr: CSRMatrix, config: SpMMConfig, *,
                  backend: str = "engine", interpret: bool = True,
@@ -285,6 +442,8 @@ class ParamSpMMOperator:
                                      t.n_rows, t.n_cols, config)
         self._fn = make_spmm_fn(self.pcsr, self.pcsr_t,
                                 backend=backend, interpret=interpret)
+        self.fused = make_fused_spmm_fn(self.pcsr, self.pcsr_t,
+                                        backend=backend, interpret=interpret)
 
     def __call__(self, B):
         return self._fn(B)

@@ -149,34 +149,83 @@ class PCSR:
             "vals": jnp.asarray(self.vals),
         }
 
-    def head_tiled(self, H: int):
-        """Steering arrays tiled for an H-head batch (cached per H).
+    @property
+    def fini(self) -> np.ndarray:
+        """(C,) int32 — 1 iff the chunk is the LAST chunk of its block.
 
-        Multi-head SDDMM/SpMM reuse the single-head kernels unchanged: the
-        chunk list is replicated H times with ``colidx`` offset by
-        ``h·n_cols`` (heads stacked along the gather source's row axis) and
-        ``trow`` offset by ``h·n_blocks`` (heads stacked along the output's
-        block axis).  One kernel call — and one compilation — covers every
-        head, instead of a per-head ``vmap`` over the unbatched kernel.
+        The mirror of ``init``: where ``init`` steers the kernel's
+        zero-on-first-visit, ``fini`` steers the fused *epilogue* — the
+        last ``(j, k)`` step of a block is the one moment the completed
+        ``(R, Dblk)`` output tile is still VMEM-resident, so scale/bias/
+        activation can be applied for free before write-back.  ``trow`` is
+        sorted by construction, so the last chunk of each block is the one
+        whose successor targets a different block.
         """
-        cache = self.__dict__.setdefault("_head_tiled_cache", {})
-        if H == 1:          # degenerate tiling — reuse the packed arrays
-            return {"colidx": self.colidx, "lrow": self.lrow,
-                    "trow": self.trow, "init": self.init, "vals": self.vals}
-        if H not in cache:
+        f = self.__dict__.get("_fini")
+        if f is None:
+            f = np.ones(self.num_chunks, np.int32)
+            f[:-1] = (self.trow[1:] != self.trow[:-1]).astype(np.int32)
+            self.__dict__["_fini"] = f
+        return f
+
+    @property
+    def n_empty_blocks(self) -> int:
+        """Blocks no chunk targets (their coverage chunks — see
+        ``steering(covered=True)`` — are all-padding)."""
+        return self.n_blocks - len(np.unique(self.trow))
+
+    def steering(self, H: int = 1, covered: bool = False):
+        """Steering arrays for the kernels (cached per (H, covered)).
+
+        ``H > 1`` tiles the chunk list for an H-head batch: ``colidx`` is
+        offset by ``h·n_cols`` (heads stacked along the gather source's row
+        axis) and ``trow`` by ``h·n_blocks`` (heads stacked along the
+        output's block axis), so ONE kernel call — and one compilation —
+        covers every head instead of a per-head ``vmap``.
+
+        ``covered=True`` appends one all-padding chunk per *empty* block
+        (``init = fini = 1``, ``vals = 0``) so the sequential grid visits —
+        and therefore zero-initializes — every output block.  This folds
+        the unvisited-block zeroing into the kernel's own ``init`` path:
+        no post-kernel O(n_blocks·R·dim) elementwise mask pass remains,
+        and the fused epilogue (bias on empty rows!) applies uniformly.
+        The appended chunks come LAST, so the first ``C·K`` entries of a
+        covered array are exactly the uncovered ones (prefix property the
+        distributed packing relies on).
+        """
+        cache = self.__dict__.setdefault("_steering_cache", {})
+        key = (H, covered)
+        if key in cache:
+            return cache[key]
+        colidx, lrow = self.colidx, self.lrow
+        trow, init, fini, vals = self.trow, self.init, self.fini, self.vals
+        if covered:
+            empty = np.setdiff1d(np.arange(self.n_blocks, dtype=np.int64),
+                                 trow.astype(np.int64))
+            E = len(empty)
+            if E:
+                colidx = np.concatenate([colidx, np.zeros(E * self.K, np.int32)])
+                lrow = np.concatenate([lrow, np.zeros(E * self.K, np.int32)])
+                trow = np.concatenate([trow, empty.astype(np.int32)])
+                init = np.concatenate([init, np.ones(E, np.int32)])
+                fini = np.concatenate([fini, np.ones(E, np.int32)])
+                vals = np.concatenate(
+                    [vals, np.zeros((E, self.config.V, self.K), np.float32)])
+        if H > 1:
             hh = np.arange(H, dtype=np.int64)
-            colidx = (np.tile(self.colidx, (H, 1))
+            colidx = (np.tile(colidx, (H, 1))
                       + (hh * self.n_cols)[:, None]).reshape(-1).astype(np.int32)
-            trow = (np.tile(self.trow, (H, 1))
+            trow = (np.tile(trow, (H, 1))
                     + (hh * self.n_blocks)[:, None]).reshape(-1).astype(np.int32)
-            cache[H] = {
-                "colidx": colidx,
-                "lrow": np.tile(self.lrow, H),
-                "trow": trow,
-                "init": np.tile(self.init, H),
-                "vals": np.tile(self.vals, (H, 1, 1)),
-            }
-        return cache[H]
+            lrow, init, fini = (np.tile(a, H) for a in (lrow, init, fini))
+            vals = np.tile(vals, (H, 1, 1))
+        cache[key] = {"colidx": colidx, "lrow": lrow, "trow": trow,
+                      "init": init, "fini": fini, "vals": vals}
+        return cache[key]
+
+    def head_tiled(self, H: int):
+        """Back-compat alias for ``steering(H)`` (uncovered arrays)."""
+        return self.steering(H)
 
 
 def _vectorize(indptr, indices, data, n_rows, n_cols, V):

@@ -25,6 +25,12 @@ Execution is one SPMD ``shard_map`` program:
    ``halo_scatter_back`` (scatter → ``psum_scatter`` → local add), the
    exact transpose of the forward exchange.
 
+``DistGraph.fused`` is the epilogue-fused distributed aggregation:
+scale/bias/activation applied per shard inside the SPMD program
+(in-kernel on Pallas branches via the covered steering pack's ``fini``
+arrays, XLA-fused into the engine branches) — no global elementwise pass
+follows the halo'd SpMM.
+
 ``dist_gat_message`` runs SDDMM → LeakyReLU → edge softmax → SpMM per
 shard.  Row partitioning keeps every destination row's full edge set on
 one shard, so edge softmax needs no communication — only the K/Vf halo
@@ -45,7 +51,8 @@ import numpy as np
 from repro.core import (CostModel, CSRMatrix, SpMMConfig, build_pcsr,
                         config_space, extract_features)
 from repro.core.engine import (_engine, _engine_sddmm, _slot_rows,
-                               attend_scores)
+                               apply_epilogue, attend_scores,
+                               epilogue_grad)
 
 from .halo import HaloSpec, build_halo, halo_exchange, halo_scatter_back
 from .partition import RowPartition, partition_csr
@@ -60,9 +67,14 @@ from jax.sharding import PartitionSpec
 AXIS = "parts"
 
 
-def _shard_map(f, mesh, n_in: int):
+def _shard_map(f, mesh, n_in: int, replicated: tuple = ()):
+    """Shard every arg along the mesh axis except the ``replicated``
+    argument indices (e.g. a per-feature bias every shard reads whole)."""
     spec = PartitionSpec(AXIS, None)
-    kwargs = dict(mesh=mesh, in_specs=(spec,) * n_in, out_specs=spec)
+    rspec = PartitionSpec(None, None)
+    in_specs = tuple(rspec if i in replicated else spec
+                     for i in range(n_in))
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=spec)
     try:
         return _shard_map_raw(f, check_rep=False, **kwargs)
     except TypeError:                      # newer jax dropped check_rep
@@ -72,58 +84,82 @@ def _shard_map(f, mesh, n_in: int):
 # ------------------------------------------------------------- packing
 @dataclass
 class PackedShards:
-    """Per-shard PCSR steering arrays padded to uniform shapes and
-    stacked along a leading partition axis (device arrays)."""
+    """Per-shard *covered* PCSR steering arrays (every block visited —
+    ``PCSR.steering(covered=True)``) padded to uniform shapes and stacked
+    along a leading partition axis (device arrays).  Coverage chunks come
+    after the real ones, so an engine branch slicing the uncovered prefix
+    and a Pallas branch slicing the covered length read the same pack."""
 
     pcsrs: list                  # per-shard PCSR (host; static shapes)
     colidx: jnp.ndarray          # (P, S_max) int32
     lrow: jnp.ndarray            # (P, S_max) int32
     trow: jnp.ndarray            # (P, C_max) int32
     init: jnp.ndarray            # (P, C_max) int32
+    fini: jnp.ndarray            # (P, C_max) int32 — last chunk of block
     vals: jnp.ndarray            # (P, VS_max) float32, flattened (C,V,K)
 
 
 def pack_shards(pcsrs) -> PackedShards:
     P = len(pcsrs)
-    S = max(p.colidx.shape[0] for p in pcsrs)
-    C = max(p.num_chunks for p in pcsrs)
-    VS = max(p.vals.size for p in pcsrs)
+    sts = [p.steering(covered=True) for p in pcsrs]
+    S = max(s["colidx"].shape[0] for s in sts)
+    C = max(s["trow"].shape[0] for s in sts)
+    VS = max(s["vals"].size for s in sts)
     colidx = np.zeros((P, S), np.int32)
     lrow = np.zeros((P, S), np.int32)
     trow = np.zeros((P, C), np.int32)
     init = np.zeros((P, C), np.int32)
+    fini = np.zeros((P, C), np.int32)
     vals = np.zeros((P, VS), np.float32)
-    for i, p in enumerate(pcsrs):
-        colidx[i, :p.colidx.shape[0]] = p.colidx
-        lrow[i, :p.lrow.shape[0]] = p.lrow
-        trow[i, :p.num_chunks] = p.trow
-        init[i, :p.num_chunks] = p.init
-        vals[i, :p.vals.size] = p.vals.reshape(-1)
+    for i, s in enumerate(sts):
+        colidx[i, :s["colidx"].shape[0]] = s["colidx"]
+        lrow[i, :s["lrow"].shape[0]] = s["lrow"]
+        trow[i, :s["trow"].shape[0]] = s["trow"]
+        init[i, :s["init"].shape[0]] = s["init"]
+        fini[i, :s["fini"].shape[0]] = s["fini"]
+        vals[i, :s["vals"].size] = s["vals"].reshape(-1)
     return PackedShards(list(pcsrs), *map(jnp.asarray,
-                                          (colidx, lrow, trow, init, vals)))
+                                          (colidx, lrow, trow, init, fini,
+                                           vals)))
 
 
-def _spmm_branch(pcsr, *, n_out: int, backend: str, interpret: bool):
-    """Branch computing ``A_p · B_ext`` with shard-``p``-static shapes."""
+def _spmm_branch(pcsr, *, n_out: int, backend: str, interpret: bool,
+                 epilogue: bool = False, activation: str = "none"):
+    """Branch computing ``A_p · B_ext`` with shard-``p``-static shapes.
+
+    With ``epilogue=True`` the branch takes two extra operands — the
+    shard's per-row scale column and the replicated per-feature bias row —
+    and applies scale/bias/activation per shard: in-kernel on the Pallas
+    backend (the fused epilogue), XLA-fused into the SPMD program on the
+    engine backend."""
     cfg = pcsr.config
     C, K, V, R, nb = pcsr.num_chunks, pcsr.K, cfg.V, cfg.R, pcsr.n_blocks
     S, VS = C * K, C * V * K
 
     if backend == "pallas":
         from repro.kernels.paramspmm.ops import _call as _pallas_call
+        Cc = pcsr.steering(covered=True)["trow"].shape[0]
+        Sc, VSc = Cc * K, Cc * V * K
 
-        def branch(colidx, lrow, trow, init, vals, b_ext):
+        def branch(colidx, lrow, trow, init, fini, vals, b_ext, *ep):
+            kw = {}
+            if epilogue:
+                kw = dict(scale=ep[0][:, 0], bias=ep[1][0],
+                          activation=activation)
             return _pallas_call(
-                colidx[:S], lrow[:S], trow[:C], init[:C],
-                vals[:VS].reshape(C, V, K), b_ext,
+                colidx[:Sc], lrow[:Sc], trow[:Cc], init[:Cc], fini[:Cc],
+                vals[:VSc].reshape(Cc, V, K), b_ext,
                 n_blocks=nb, R=R, V=V, K=K, dblk=cfg.dblk,
-                n_rows=n_out, dim=b_ext.shape[1], interpret=interpret)
+                n_rows=n_out, dim=b_ext.shape[1], interpret=interpret, **kw)
         return branch
 
-    def branch(colidx, lrow, trow, init, vals, b_ext):
-        return _engine(colidx[:S], lrow[:S], trow[:C],
-                       vals[:VS].reshape(C, V, K), b_ext,
-                       V=V, R=R, K=K, n_blocks=nb, n_rows=n_out)
+    def branch(colidx, lrow, trow, init, fini, vals, b_ext, *ep):
+        out = _engine(colidx[:S], lrow[:S], trow[:C],
+                      vals[:VS].reshape(C, V, K), b_ext,
+                      V=V, R=R, K=K, n_blocks=nb, n_rows=n_out)
+        if epilogue:
+            out = apply_epilogue(out, ep[0][:, 0], ep[1][0], activation)
+        return out
     return branch
 
 
@@ -133,7 +169,7 @@ def _gat_branch(pcsr, *, n_out: int, slope: float):
     C, K, V, R, nb = pcsr.num_chunks, pcsr.K, cfg.V, cfg.R, pcsr.n_blocks
     S, VS = C * K, C * V * K
 
-    def branch(colidx, lrow, trow, init, vals, q, k_ext, vf_ext):
+    def branch(colidx, lrow, trow, init, fini, vals, q, k_ext, vf_ext):
         ci, lr, tr = colidx[:S], lrow[:S], trow[:C]
         vv = vals[:VS].reshape(C, V, K)
         scores = _engine_sddmm(ci, lr, tr, vv, q, k_ext, V=V, R=R, K=K)
@@ -216,6 +252,8 @@ class DistGraph:
 
         self._spmm_fn = None               # built lazily (first call) so a
         self._gat_fns: dict = {}           # host-side plan needs no devices
+        self._fused_fns: dict = {}         # per-activation fused programs
+        self._bwd_fn = None                # shared transpose-path shard_map
 
     @property
     def mesh(self):
@@ -255,6 +293,25 @@ class DistGraph:
 
     __call__ = spmm
 
+    def fused(self, B, scale=None, bias=None, activation: str = "none"):
+        """Epilogue-fused distributed aggregation
+        ``act(scale ⊙ (A·B) + bias)`` — scale/bias/activation are applied
+        *per shard inside the SPMD program* (in-kernel on the Pallas
+        backend, XLA-fused into the branch on the engine backend), so no
+        separate global elementwise pass follows the halo'd SpMM.
+        Differentiable in ``B`` and ``bias``; ``scale`` (degree data) is a
+        constant."""
+        if activation not in self._fused_fns:
+            self._fused_fns[activation] = _build_dist_fused_spmm(
+                self, activation=activation)
+        n, d = self.part.n_global, jnp.shape(B)[-1]
+        scale = jnp.ones(n, jnp.float32) if scale is None \
+            else jnp.asarray(scale)
+        bias_arr = jnp.zeros(d, jnp.float32) if bias is None \
+            else jnp.asarray(bias)
+        out = self._fused_fns[activation](B, scale, bias_arr)
+        return out
+
     def gat_message(self, Q, K, Vf, *, slope: float = 0.2):
         """Distributed GAT message (single-head, engine backend)."""
         if jnp.ndim(Q) == 3:
@@ -266,47 +323,58 @@ class DistGraph:
         return self._gat_fns[slope](Q, K, Vf)
 
 
+def _dist_bwd_transpose(g: DistGraph):
+    """The transpose-path backward ``dB = Aᵀ·dC`` with halo scatter-back,
+    built lazily on the first backward trace (forward-only use never
+    builds the transpose PCSRs) and shared between the plain and the
+    epilogue-fused distributed SpMM."""
+    if g._bwd_fn is None:
+        rows_pad, ext = g.part.rows_pad, g.part.ext_cols
+        n_parts, max_send = g.halo.n_parts, g.halo.max_send
+        bwd_branches = [_spmm_branch(p, n_out=ext, backend=g.backend,
+                                     interpret=g.interpret)
+                        for p in g._bwd.pcsrs]
+
+        def bwd_body(dc, colidx, lrow, trow, init, fini, vals, sidx, hsrc):
+            i = jax.lax.axis_index(AXIS)
+            d_ext = jax.lax.switch(i, bwd_branches, colidx[0], lrow[0],
+                                   trow[0], init[0], fini[0], vals[0], dc)
+            back = halo_scatter_back(d_ext[rows_pad:], sidx[0], hsrc[0],
+                                     n_parts=n_parts, max_send=max_send,
+                                     rows_pad=rows_pad, axis_name=AXIS)
+            return d_ext[:rows_pad] + back
+
+        sm = _shard_map(bwd_body, g.mesh, 9)
+
+        def run(dC):
+            dB = sm(g.pad(dC), g._bwd.colidx, g._bwd.lrow, g._bwd.trow,
+                    g._bwd.init, g._bwd.fini, g._bwd.vals,
+                    g._send_idx, g._halo_src)
+            return g.unpad(dB)
+
+        g._bwd_fn = jax.jit(run)   # cache the SPMD trace across steps
+    return g._bwd_fn
+
+
 def _build_dist_spmm(g: DistGraph):
     """The ``custom_vjp`` distributed SpMM closed over one DistGraph."""
-    rows_pad, ext = g.part.rows_pad, g.part.ext_cols
-    n_parts, max_send = g.halo.n_parts, g.halo.max_send
-    fwd_branches = [_spmm_branch(p, n_out=rows_pad, backend=g.backend,
-                                 interpret=g.interpret)
+    fwd_branches = [_spmm_branch(p, n_out=g.part.rows_pad,
+                                 backend=g.backend, interpret=g.interpret)
                     for p in g._fwd.pcsrs]
 
-    def fwd_body(b, colidx, lrow, trow, init, vals, sidx, hsrc):
+    def fwd_body(b, colidx, lrow, trow, init, fini, vals, sidx, hsrc):
         halo = halo_exchange(b, sidx[0], hsrc[0], axis_name=AXIS)
         b_ext = jnp.concatenate([b, halo], axis=0)
         i = jax.lax.axis_index(AXIS)
         return jax.lax.switch(i, fwd_branches, colidx[0], lrow[0],
-                              trow[0], init[0], vals[0], b_ext)
+                              trow[0], init[0], fini[0], vals[0], b_ext)
 
-    fwd_sm = _shard_map(fwd_body, g.mesh, 8)
-    bwd_cache = []
-
-    def bwd_sm():
-        """Transpose-path shard_map, built on the first backward trace
-        (forward-only use never builds the transpose PCSRs)."""
-        if not bwd_cache:
-            bwd_branches = [_spmm_branch(p, n_out=ext, backend=g.backend,
-                                         interpret=g.interpret)
-                            for p in g._bwd.pcsrs]
-
-            def bwd_body(dc, colidx, lrow, trow, init, vals, sidx, hsrc):
-                i = jax.lax.axis_index(AXIS)
-                d_ext = jax.lax.switch(i, bwd_branches, colidx[0], lrow[0],
-                                       trow[0], init[0], vals[0], dc)
-                back = halo_scatter_back(d_ext[rows_pad:], sidx[0], hsrc[0],
-                                         n_parts=n_parts, max_send=max_send,
-                                         rows_pad=rows_pad, axis_name=AXIS)
-                return d_ext[:rows_pad] + back
-
-            bwd_cache.append(_shard_map(bwd_body, g.mesh, 8))
-        return bwd_cache[0]
+    fwd_sm = _shard_map(fwd_body, g.mesh, 9)
 
     def run_fwd(B):
         out = fwd_sm(g.pad(B), g._fwd.colidx, g._fwd.lrow, g._fwd.trow,
-                     g._fwd.init, g._fwd.vals, g._send_idx, g._halo_src)
+                     g._fwd.init, g._fwd.fini, g._fwd.vals,
+                     g._send_idx, g._halo_src)
         return g.unpad(out)
 
     @jax.custom_vjp
@@ -317,12 +385,61 @@ def _build_dist_spmm(g: DistGraph):
         return run_fwd(B), None
 
     def f_bwd(_, dC):
-        dB = bwd_sm()(g.pad(dC), g._bwd.colidx, g._bwd.lrow, g._bwd.trow,
-                      g._bwd.init, g._bwd.vals, g._send_idx, g._halo_src)
-        return (g.unpad(dB),)
+        return (_dist_bwd_transpose(g)(dC),)
 
     f.defvjp(f_fwd, f_bwd)
     return jax.jit(f)          # cache the SPMD trace across training steps
+
+
+def _build_dist_fused_spmm(g: DistGraph, *, activation: str):
+    """Epilogue-fused distributed SpMM: one SPMD program whose per-shard
+    branches apply scale/bias/activation where the output is produced —
+    in-kernel (Pallas) or XLA-fused into the branch (engine) — so the
+    fused distributed GCN layer runs no global elementwise pass after the
+    halo'd SpMM.  A ``custom_vjp`` over (B, bias): the backward reuses the
+    shared transpose path on ``scale ⊙ (dOut ⊙ act'(out))`` and reduces
+    ``dbias`` over rows, mirroring the single-device fused closure."""
+    rows_pad = g.part.rows_pad
+    branches = [_spmm_branch(p, n_out=rows_pad, backend=g.backend,
+                             interpret=g.interpret, epilogue=True,
+                             activation=activation)
+                for p in g._fwd.pcsrs]
+
+    def body(b, colidx, lrow, trow, init, fini, vals, sidx, hsrc, sc, bi):
+        halo = halo_exchange(b, sidx[0], hsrc[0], axis_name=AXIS)
+        b_ext = jnp.concatenate([b, halo], axis=0)
+        i = jax.lax.axis_index(AXIS)
+        return jax.lax.switch(i, branches, colidx[0], lrow[0], trow[0],
+                              init[0], fini[0], vals[0], b_ext, sc, bi)
+
+    sm = _shard_map(body, g.mesh, 11, replicated=(10,))
+
+    @jax.jit                       # cache the SPMD trace across steps;
+    def run_fwd(B, scale, bias):   # the custom_vjp wrapper stays unjitted
+        out = sm(g.pad(B), g._fwd.colidx, g._fwd.lrow, g._fwd.trow,
+                 g._fwd.init, g._fwd.fini, g._fwd.vals,
+                 g._send_idx, g._halo_src,
+                 g.pad(scale[:, None]), bias[None, :])
+        return g.unpad(out)
+
+    @jax.custom_vjp
+    def f(B, scale, bias):
+        return run_fwd(B, scale, bias)
+
+    def f_fwd(B, scale, bias):
+        out = run_fwd(B, scale, bias)
+        return out, (out, scale)
+
+    def f_bwd(res, dOut):
+        out, scale = res
+        dpre = epilogue_grad(out, dOut, activation)
+        dbias = dpre.sum(axis=0)
+        dB = _dist_bwd_transpose(g)(dpre * scale[:, None])
+        # scale is graph data (degree norms), not a trained parameter
+        return dB, jnp.zeros_like(scale), dbias
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
 
 
 def _build_dist_gat(g: DistGraph, *, slope: float):
@@ -331,7 +448,7 @@ def _build_dist_gat(g: DistGraph, *, slope: float):
     branches = [_gat_branch(p, n_out=rows_pad, slope=slope)
                 for p in g._fwd.pcsrs]
 
-    def body(q, k, vf, colidx, lrow, trow, init, vals, sidx, hsrc):
+    def body(q, k, vf, colidx, lrow, trow, init, fini, vals, sidx, hsrc):
         dk = k.shape[1]
         # one exchange serves both operands of the shard's SDDMM + SpMM
         halo = halo_exchange(jnp.concatenate([k, vf], axis=1),
@@ -340,14 +457,14 @@ def _build_dist_gat(g: DistGraph, *, slope: float):
         vf_ext = jnp.concatenate([vf, halo[:, dk:]], axis=0)
         i = jax.lax.axis_index(AXIS)
         return jax.lax.switch(i, branches, colidx[0], lrow[0], trow[0],
-                              init[0], vals[0], q, k_ext, vf_ext)
+                              init[0], fini[0], vals[0], q, k_ext, vf_ext)
 
-    sm = _shard_map(body, g.mesh, 10)
+    sm = _shard_map(body, g.mesh, 11)
 
     def f(Q, K, Vf):
         out = sm(g.pad(Q), g.pad(K), g.pad(Vf),
                  g._fwd.colidx, g._fwd.lrow, g._fwd.trow, g._fwd.init,
-                 g._fwd.vals, g._send_idx, g._halo_src)
+                 g._fwd.fini, g._fwd.vals, g._send_idx, g._halo_src)
         return g.unpad(out)
 
     return jax.jit(f)          # cache the SPMD trace across training steps

@@ -1,4 +1,5 @@
-"""ParamSpMM Pallas TPU kernel (paper Alg. 2, TPU adaptation per DESIGN.md §2).
+"""ParamSpMM Pallas TPU kernel (paper Alg. 2, TPU adaptation per DESIGN.md §2)
+with fused prologue / epilogue.
 
 Grid ``(J, C, K)`` = (dim-tiles, chunks, slots).  Scalar-prefetched
 ``colidx`` drives the gather of one ``(1, Dblk)`` row of ``B`` per step via
@@ -13,6 +14,28 @@ Parameter mapping (paper → here):
   F → ``Dblk = F·128`` lanes per step (thread coarsening);
   W → ``R = V·W`` output-block rows;
   S → chunking policy baked into the PCSR arrays (kernel is agnostic).
+
+Fusion (this file's reason to exist beyond the plain gather-scatter):
+
+* **Softmax prologue** (``prologue=True``): ``vals`` carries raw attention
+  *logits* (masked slots = −inf) and two extra ``(n_blocks, R)`` inputs
+  carry the per-row online-softmax stats the fused SDDMM produced.  The
+  attention weight α = exp(logit − rowmax)/rowsum is computed in-register
+  while the gathered B row is being consumed — the interstitial
+  elementwise normalize pass between SDDMM and SpMM disappears, making
+  the GAT forward exactly TWO kernels.
+* **Epilogue** (``scale``/``bias``/``activation``): on the last ``(j, k)``
+  visit of each output block — ``fini[c] == 1 and k == K−1``, the moment
+  the completed ``(R, Dblk)`` tile is still VMEM-resident — a per-row
+  degree-norm scale, per-feature bias add, and activation are applied
+  before write-back, so a GCN aggregation step is ONE kernel instead of
+  kernel + 2–3 XLA elementwise passes over the (n, d) output.
+
+Padding-slot safety under the prologue: a masked/padding slot carries
+logit = −inf, so exp(−inf − m) = 0 regardless of the row stats — even the
+garbage stats of never-visited rows (the ``isfinite``/``> 0`` guards keep
+the 0 exact instead of NaN).  Coverage chunks for empty blocks (see
+``PCSR.steering(covered=True)``) therefore accumulate exactly zero.
 """
 from __future__ import annotations
 
@@ -23,13 +46,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+ACTIVATIONS = ("none", "relu", "leaky_relu")
 
-def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref,   # scalar prefetch
-            vals_ref, b_ref,                            # VMEM inputs
-            out_ref,                                    # VMEM output
-            *, V: int, K: int):
+
+def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
+            *refs, V: int, K: int, prologue: bool, has_scale: bool,
+            has_bias: bool, activation: str, slope: float):
     c = pl.program_id(1)
     k = pl.program_id(2)
+
+    it = iter(refs)
+    vals_ref, b_ref = next(it), next(it)
+    rowmax_ref = next(it) if prologue else None
+    rowsum_ref = next(it) if prologue else None
+    scale_ref = next(it) if has_scale else None
+    bias_ref = next(it) if has_bias else None
+    out_ref = next(it)
 
     # First visit of this output block in this dim-tile pass → zero it.
     @pl.when((k == 0) & (init_ref[c] == 1))
@@ -37,43 +69,104 @@ def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref,   # scalar prefetch
         out_ref[...] = jnp.zeros_like(out_ref)
 
     lr = lrow_ref[c * K + k]                 # panel within block
-    vv = vals_ref[0, :, k]                   # (V,) vector values
-    brow = b_ref[0, :]                       # (Dblk,) gathered B row
     row = lr * V
+    vv = vals_ref[0, :, k]                   # (V,) values — or raw logits
+    if prologue:
+        # α = exp(logit − rowmax)/rowsum in-register (flash-style): the
+        # stats block for trow[c] is VMEM-resident across the chunk.
+        # Guards: empty rows have rowmax = −inf / rowsum = 0 (or garbage
+        # when the row's block was never visited by the SDDMM); masked and
+        # padding slots have logit = −inf, so α must come out exactly 0.
+        m = rowmax_ref[0, pl.ds(row, V)]
+        s = rowsum_ref[0, pl.ds(row, V)]
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        den = jnp.where(s > 0, s, 1.0)
+        vv = jnp.exp(vv - m) / den
+    brow = b_ref[0, :]                       # (Dblk,) gathered B row
     acc = out_ref[pl.ds(row, V), :]
     out_ref[pl.ds(row, V), :] = acc + vv[:, None].astype(brow.dtype) * brow[None, :]
 
+    if has_scale or has_bias or activation != "none":
+        # Last (j, k) visit of this output block → the accumulated
+        # (R, Dblk) tile is complete for this dim tile; apply the fused
+        # epilogue while it is still VMEM-resident.
+        @pl.when((k == K - 1) & (fini_ref[c] == 1))
+        def _epilogue():
+            y = out_ref[...]
+            if has_scale:
+                y = y * scale_ref[0, :][:, None].astype(y.dtype)
+            if has_bias:
+                y = y + bias_ref[0, :][None, :].astype(y.dtype)
+            if activation == "relu":
+                y = jnp.maximum(y, 0.0)
+            elif activation == "leaky_relu":
+                y = jnp.where(y >= 0, y, slope * y)
+            out_ref[...] = y
 
-def paramspmm_kernel(colidx, lrow, trow, init, vals, B_padded, *,
+
+def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
                      n_blocks: int, R: int, V: int, K: int, dblk: int,
+                     rowmax=None, rowsum=None, scale=None, bias=None,
+                     activation: str = "none", slope: float = 0.2,
                      interpret: bool = True):
     """Invoke the Pallas kernel on pre-padded operands.
 
     B_padded: (n_b, J·dblk).  Returns C_padded (n_blocks·R, J·dblk).
+
+    Optional fusion operands:
+      rowmax/rowsum (n_blocks, R) — softmax prologue stats (vals = logits);
+      scale (n_blocks, R)         — per-row epilogue scale (degree norm);
+      bias (1, J·dblk)            — per-feature epilogue bias;
+      activation                  — "none" | "relu" | "leaky_relu" epilogue.
     """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation {activation!r} not in {ACTIVATIONS}")
     C = trow.shape[0]
     dim_pad = B_padded.shape[1]
     assert dim_pad % dblk == 0
     J = dim_pad // dblk
     grid = (J, C, K)
+    prologue = rowmax is not None
+
+    in_specs = [
+        # whole chunk's vals; index map constant in k → fetched once/chunk
+        pl.BlockSpec((1, V, K), lambda j, c, k, ci, lr, tr, it, fi: (c, 0, 0)),
+        # the gather: B row chosen by the scalar-prefetched colidx
+        pl.BlockSpec((1, dblk),
+                     lambda j, c, k, ci, lr, tr, it, fi: (ci[c * K + k], j)),
+    ]
+    operands = [vals, B_padded]
+    if prologue:
+        stats_spec = pl.BlockSpec(
+            (1, R), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], 0))
+        in_specs += [stats_spec, stats_spec]
+        operands += [rowmax, rowsum]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, R), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], 0)))
+        operands.append(scale)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, dblk), lambda j, c, k, ci, lr, tr, it, fi: (0, j)))
+        operands.append(bias)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=5,
         grid=grid,
-        in_specs=[
-            # whole chunk's vals; index map constant in k → fetched once/chunk
-            pl.BlockSpec((1, V, K), lambda j, c, k, ci, lr, tr, it: (c, 0, 0)),
-            # the gather: B row chosen by the scalar-prefetched colidx
-            pl.BlockSpec((1, dblk),
-                         lambda j, c, k, ci, lr, tr, it: (ci[c * K + k], j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((R, dblk),
-                               lambda j, c, k, ci, lr, tr, it: (tr[c], j)),
+                               lambda j, c, k, ci, lr, tr, it, fi: (tr[c], j)),
     )
     fn = pl.pallas_call(
-        functools.partial(_kernel, V=V, K=K),
+        functools.partial(_kernel, V=V, K=K, prologue=prologue,
+                          has_scale=scale is not None,
+                          has_bias=bias is not None,
+                          activation=activation, slope=slope),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks * R, dim_pad), B_padded.dtype),
         interpret=interpret,
-        name=f"paramspmm_v{V}_k{K}_r{R}_d{dblk}",
+        name=f"paramspmm_v{V}_k{K}_r{R}_d{dblk}"
+             f"{'_pro' if prologue else ''}"
+             f"{'' if activation == 'none' else '_' + activation}",
     )
-    return fn(colidx, lrow, trow, init, vals, B_padded)
+    return fn(colidx, lrow, trow, init, fini, *operands)

@@ -1,5 +1,22 @@
 """Jit'd wrapper around the ParamSpMM Pallas kernel: padding, dispatch,
 and the high-level ``paramspmm(pcsr, B)`` entry point.
+
+All Pallas dispatch goes through *covered* steering arrays
+(``PCSR.steering(covered=True)``): every output block — including empty
+ones — is visited and zero-initialized by the kernel's own ``init`` path,
+so no post-kernel unvisited-block mask pass (the old ``jnp.where`` +
+``jnp.repeat`` over the full padded output) remains.
+
+Fusion surface (see ``kernel.py``):
+
+* ``paramspmm_with_vals(..., stats=(rowmax, rowsum))`` — softmax
+  *prologue*: ``vals`` are raw logits (masked slots −inf) and α is
+  computed in-register from the per-row stats.  The GAT hot path feeds
+  the fused SDDMM's stats straight in: two kernels, zero interstitial
+  elementwise pass.
+* ``paramspmm(..., scale=, bias=, activation=)`` — fused *epilogue*:
+  per-row degree-norm scale, per-feature bias, activation applied on the
+  last visit of each VMEM-resident output block.
 """
 from __future__ import annotations
 
@@ -21,69 +38,136 @@ def _pad_cols(B, dblk: int):
     return B, dim_pad
 
 
+def _pad_rows_2d(x, n_rows: int):
+    """Pad/reshape a flat per-row vector to the kernel's (n_blocks, R)."""
+    return jnp.pad(x.reshape(-1), (0, n_rows - x.size))
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "interpret"))
-def _call(colidx, lrow, trow, init, vals, B, *, n_blocks, R, V, K, dblk,
-          n_rows, dim, interpret):
-    B_padded, _ = _pad_cols(B, dblk)
-    out = paramspmm_kernel(colidx, lrow, trow, init, vals, B_padded,
+    "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "activation",
+    "interpret"))
+def _call(colidx, lrow, trow, init, fini, vals, B, rowmax=None, rowsum=None,
+          scale=None, bias=None, *, n_blocks, R, V, K, dblk, n_rows, dim,
+          activation="none", interpret):
+    """Pallas dispatch on pre-packed (covered) steering arrays.
+
+    ``scale`` is a flat per-row vector (≤ n_blocks·R entries), ``bias`` a
+    flat per-feature vector (≤ dim entries); both are padded here to the
+    kernel's block shapes.  ``rowmax``/``rowsum`` are the (n_blocks, R)
+    online-softmax stats from the fused SDDMM (vals = raw logits).
+    """
+    B_padded, dim_pad = _pad_cols(B, dblk)
+    if scale is not None:
+        scale = _pad_rows_2d(scale, n_blocks * R).reshape(n_blocks, R)
+    if bias is not None:
+        bias = jnp.pad(bias.reshape(-1), (0, dim_pad - bias.size))[None, :]
+    out = paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded,
                            n_blocks=n_blocks, R=R, V=V, K=K, dblk=dblk,
+                           rowmax=rowmax, rowsum=rowsum, scale=scale,
+                           bias=bias, activation=activation,
                            interpret=interpret)
-    # blocks with no chunk are never visited by the grid → their output
-    # region is uninitialized; those rows of A are empty ⇒ force zero.
-    visited = jnp.zeros(n_blocks, bool).at[trow].set(True)
-    out = jnp.where(jnp.repeat(visited, R)[:, None], out, 0.0)
     return out[:n_rows, :dim]
 
 
-def paramspmm(pcsr: PCSR, B, *, interpret: bool = True):
-    """C = A·B where A is held as PCSR. Pallas path (interpret on CPU)."""
-    return paramspmm_with_vals(pcsr, None, B, interpret=interpret)
+def paramspmm(pcsr: PCSR, B, *, scale=None, bias=None,
+              activation: str = "none", interpret: bool = True):
+    """C = act(scale ⊙ (A·B) + bias) where A is held as PCSR — the
+    epilogue operands default to the identity (plain A·B).  Pallas path
+    (interpret on CPU)."""
+    return paramspmm_with_vals(pcsr, None, B, scale=scale, bias=bias,
+                               activation=activation, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "H", "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "interpret"))
-def _call_heads(colidx, lrow, trow, init, vals, B, *, H, n_blocks, R, V, K,
-                dblk, n_rows, dim, interpret):
-    out = _call(colidx, lrow, trow, init,
+    "H", "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "activation",
+    "interpret"))
+def _call_heads(colidx, lrow, trow, init, fini, vals, B, rowmax=None,
+                rowsum=None, *, H, n_blocks, R, V, K, dblk, n_rows, dim,
+                activation="none", interpret):
+    out = _call(colidx, lrow, trow, init, fini,
                 vals.reshape((H * vals.shape[1],) + vals.shape[2:]),
                 B.reshape(H * B.shape[1], B.shape[2]),
+                rowmax, rowsum,
                 n_blocks=H * n_blocks, R=R, V=V, K=K, dblk=dblk,
-                n_rows=H * n_blocks * R, dim=dim, interpret=interpret)
+                n_rows=H * n_blocks * R, dim=dim, activation=activation,
+                interpret=interpret)
     return out.reshape(H, n_blocks * R, dim)[:, :n_rows]
 
 
-def paramspmm_with_vals(pcsr: PCSR, vals, B, *, interpret: bool = True):
+def _pad_chunk_vals(vals, n_extra: int, fill: float):
+    """Append ``n_extra`` coverage chunks to a (..., C, V, K) slot tensor."""
+    if n_extra == 0:
+        return vals
+    pad = [(0, 0)] * vals.ndim
+    pad[-3] = (0, n_extra)
+    return jnp.pad(vals, pad, constant_values=fill)
+
+
+def paramspmm_with_vals(pcsr: PCSR, vals, B, *, stats=None, scale=None,
+                        bias=None, activation: str = "none",
+                        interpret: bool = True):
     """SpMM over A's *pattern* with per-slot values supplied at call time —
     the aggregation step of attention GNNs, where the PCSR topology is fixed
-    but the edge weights (softmaxed SDDMM scores) change every step.
-    ``vals=None`` uses the values stored in the PCSR.
+    but the edge weights change every step.  ``vals=None`` uses the values
+    stored in the PCSR.
+
+    ``stats=(rowmax, rowsum)`` enables the fused softmax **prologue**:
+    ``vals`` are then the raw logits from ``sddmm_softmax_stats`` (masked
+    slots −inf) and α = exp(logit − rowmax)/rowsum is computed in-register —
+    no interstitial normalize pass.  Single-head stats are ``(n_blocks, R)``;
+    multi-head ``(H·n_blocks, R)`` (the fused SDDMM's native layout).
+
+    ``scale``/``bias``/``activation`` enable the fused **epilogue**
+    (single-head only): per-row scale (flat, ≤ n_rows), per-feature bias
+    (flat, ≤ dim), then activation, applied inside the kernel on the last
+    visit of each output block.
 
     Multi-head: ``vals`` of shape (H, C, V, K) with ``B`` of shape
     (H, n, d) run all heads in one kernel call over head-tiled steering
-    arrays (``PCSR.head_tiled``) and return (H, n_rows, d) — one
+    arrays (``PCSR.steering``) and return (H, n_rows, d) — one
     compilation for the whole head batch.
     """
     cfg = pcsr.config
     B = jnp.asarray(B)
+    if stats is not None and vals is None:
+        # the prologue interprets vals as logits; stored edge weights (and
+        # the 0-valued coverage chunks) are NOT logits — exp(0 − stat)
+        # would silently turn padding into weight
+        raise ValueError("stats= requires explicit logits as vals "
+                         "(from sddmm_softmax_stats), not the stored "
+                         "PCSR values")
+    fill = -jnp.inf if stats is not None else 0.0
+    rowmax, rowsum = stats if stats is not None else (None, None)
     if B.ndim == 3:                       # (H, n, d) head batch
+        if scale is not None or bias is not None or activation != "none":
+            raise NotImplementedError("epilogue fusion is single-head")
         H = B.shape[0]
-        t = pcsr.head_tiled(H)
+        t = pcsr.steering(H, covered=True)
+        C_cov = t["trow"].shape[0] // H
         if vals is None:                  # stored values, same for each head
-            vals = t["vals"].reshape(H, pcsr.num_chunks, cfg.V, pcsr.K)
-        vals = jnp.asarray(vals)
-        if vals.ndim != 4 or vals.shape[0] != H:
-            raise ValueError(f"multi-head vals must be (H={H}, C, V, K), "
-                             f"got {vals.shape}")
+            vals = t["vals"].reshape(H, C_cov, cfg.V, pcsr.K)
+        else:
+            vals = jnp.asarray(vals)
+            if vals.ndim != 4 or vals.shape[0] != H:
+                raise ValueError(f"multi-head vals must be (H={H}, C, V, K), "
+                                 f"got {vals.shape}")
+            vals = _pad_chunk_vals(vals, C_cov - vals.shape[1], fill)
         return _call_heads(t["colidx"], t["lrow"], t["trow"], t["init"],
-                           vals, B, H=H, n_blocks=pcsr.n_blocks, R=cfg.R,
-                           V=cfg.V, K=pcsr.K, dblk=cfg.dblk,
-                           n_rows=pcsr.n_rows, dim=B.shape[2],
-                           interpret=interpret)
-    arrs = pcsr.to_jax()
-    return _call(arrs["colidx"], arrs["lrow"], arrs["trow"], arrs["init"],
-                 arrs["vals"] if vals is None else jnp.asarray(vals),
-                 B,
+                           t["fini"], vals, B, rowmax, rowsum, H=H,
+                           n_blocks=pcsr.n_blocks, R=cfg.R, V=cfg.V,
+                           K=pcsr.K, dblk=cfg.dblk, n_rows=pcsr.n_rows,
+                           dim=B.shape[2], interpret=interpret)
+    t = pcsr.steering(covered=True)
+    C_cov = t["trow"].shape[0]
+    if vals is None:
+        vals = t["vals"]
+    else:
+        vals = _pad_chunk_vals(jnp.asarray(vals),
+                               C_cov - jnp.shape(vals)[-3], fill)
+    return _call(t["colidx"], t["lrow"], t["trow"], t["init"], t["fini"],
+                 vals, B, rowmax, rowsum,
+                 None if scale is None else jnp.asarray(scale),
+                 None if bias is None else jnp.asarray(bias),
                  n_blocks=pcsr.n_blocks, R=cfg.R, V=cfg.V, K=pcsr.K,
                  dblk=cfg.dblk, n_rows=pcsr.n_rows, dim=B.shape[1],
-                 interpret=interpret)
+                 activation=activation, interpret=interpret)

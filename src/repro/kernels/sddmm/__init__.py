@@ -32,15 +32,19 @@ edge-score tensor is exact whatever the padding ratio.
 
 Entry points
 ------------
-``sddmm``          — raw masked scores (C, V, K); multi-head aware.
-``sddmm_softmax``  — fused GAT front half: scores → scale → LeakyReLU →
-  edge softmax, with the per-row max/normalizer accumulated *inside* the
-  kernel epilogue (flash-attention-style online rescale in the
-  VMEM-resident stats block) so split chunks of a row combine exactly and
-  only one elementwise normalize runs outside the kernel.
-Both accept ``(H, n, d)`` stacks and run every head through ONE kernel
-call over head-tiled steering arrays (``PCSR.head_tiled``) — one
+``sddmm``                — raw masked scores (C, V, K); multi-head aware.
+``sddmm_softmax_stats``  — fused GAT front half, stats form: one kernel
+  pass → (logits, rowmax, rowsum) with the per-row max/normalizer
+  accumulated *inside* the kernel epilogue (flash-attention-style online
+  rescale in the VMEM-resident stats block) so split chunks of a row
+  combine exactly.  Feeds the ParamSpMM softmax prologue directly: the
+  GAT forward is two kernels, zero interstitial elementwise passes.
+``sddmm_softmax``        — materialized-α reference form (stats pass +
+  one elementwise normalize).
+All accept ``(H, n, d)`` stacks and run every head through ONE kernel
+call over head-tiled steering arrays (``PCSR.steering``) — one
 compilation for the whole head batch.
 """
-from .ops import sddmm, sddmm_softmax
+from .ops import (normalize_from_stats, sddmm, sddmm_softmax,
+                  sddmm_softmax_stats)
 from .ref import sddmm_dense_ref, sddmm_slots_ref

@@ -84,7 +84,10 @@ def _fused_kernel(colidx_ref, lrow_ref, trow_ref, init_ref,   # scalar prefetch
         m = vals_ref[0, :, k] != 0           # (V,) real-edge mask
         x = acc * scale
         x = jnp.where(x >= 0, x, slope * x)  # LeakyReLU
-        score_ref[0, :, k] = jnp.where(m, x, 0.0)
+        # masked/padding slots publish −inf: downstream α = exp(logit − m)/Σ
+        # (the SpMM prologue, or the backward's recompute) then comes out
+        # exactly 0 with no separate mask operand.
+        score_ref[0, :, k] = jnp.where(m, x, -jnp.inf)
         xm = jnp.where(m, x, -jnp.inf)       # padding never drives max/sum
         row = lrow_ref[c * K + k] * V
         m_old = rowmax_ref[0, pl.ds(row, V)]
@@ -103,14 +106,16 @@ def sddmm_softmax_kernel(colidx, lrow, trow, init, vals, Q_padded, K_padded, *,
     """Fused SDDMM → edge-softmax statistics, one grid pass.
 
     Same (C, K, J) traversal as ``sddmm_kernel``, plus an epilogue on each
-    slot's final dim tile that masks padding, applies ``scale`` and
-    LeakyReLU(``slope``), and maintains per-row online-softmax statistics in
-    two extra ``(n_blocks, R)`` outputs.  Returns
+    slot's final dim tile that applies ``scale`` and LeakyReLU(``slope``),
+    masks padding slots to −inf, and maintains per-row online-softmax
+    statistics in two extra ``(n_blocks, R)`` outputs.  Returns
     ``(logits (C, V, K), rowmax (n_blocks, R), rowsum (n_blocks, R))`` where
-    ``rowsum`` is Σ exp(logit − rowmax) over each row's real edges — the
-    normalizer the cheap elementwise epilogue in ops.py divides by.
+    ``rowsum`` is Σ exp(logit − rowmax) over each row's real edges — exactly
+    the operands the fused ParamSpMM softmax *prologue* consumes, so the
+    GAT forward needs no elementwise pass between the two kernels.
     Rows of never-visited (empty) blocks hold garbage; no real slot maps to
-    them, so callers gathering per-slot stats never read those entries.
+    them, and the prologue's −inf-logit convention keeps even padding slots
+    that read garbage stats at exactly α = 0.
     """
     C = trow.shape[0]
     R = V * W

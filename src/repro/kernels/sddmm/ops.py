@@ -5,11 +5,14 @@ every head in ONE kernel call over head-tiled PCSR steering arrays — see
 ``PCSR.head_tiled`` — so multi-head GAT compiles once):
 
 * ``sddmm(pcsr, Q, K)`` — raw masked edge scores in slot layout;
-* ``sddmm_softmax(pcsr, Q, K)`` — the fused GAT attention front half:
-  scores → scale → LeakyReLU → edge softmax, with the row-max/normalizer
-  accumulated *inside* the kernel epilogue while the score block is VMEM
-  resident.  Only a cheap elementwise normalize runs outside the kernel,
-  cutting the HBM round-trips the unfused score→segment-softmax path paid.
+* ``sddmm_softmax_stats(pcsr, Q, K)`` — the fused GAT attention front
+  half in *stats form*: one kernel pass producing raw logits (masked
+  slots −inf) + per-row online-softmax stats, consumed directly by the
+  ParamSpMM softmax prologue — ZERO elementwise passes between the two
+  kernels of the GAT forward;
+* ``sddmm_softmax(pcsr, Q, K)`` — the materialized-α reference form
+  (stats pass + one elementwise normalize), kept for validation and for
+  callers that genuinely need α as a tensor.
 """
 from __future__ import annotations
 
@@ -69,42 +72,49 @@ def sddmm(pcsr: PCSR, Q, K, *, interpret: bool = True):
 @functools.partial(jax.jit, static_argnames=(
     "H", "n_blocks", "R", "W", "V", "K", "dblk", "scale", "slope",
     "interpret"))
-def _fused_call(colidx, lrow, trow, init, vals, Q, K_mat, *, H, n_blocks, R,
+def _stats_call(colidx, lrow, trow, init, vals, Q, K_mat, *, H, n_blocks, R,
                 W, V, K, dblk, scale, slope, interpret):
     from .kernel import sddmm_softmax_kernel
     Qp = _pad_q(Q, n_blocks * R, dblk).reshape(H * n_blocks * R, -1)
     Kp, _ = _pad_cols(K_mat.reshape(-1, K_mat.shape[-1]), dblk)
-    logits, rowmax, rowsum = sddmm_softmax_kernel(
+    return sddmm_softmax_kernel(
         colidx, lrow, trow, init, vals, Qp, Kp,
         n_blocks=H * n_blocks, W=W, V=V, K=K, dblk=dblk,
         scale=scale, slope=slope, interpret=interpret)
-    # cheap elementwise epilogue: slot → row stats gather + normalize.
-    # (The expensive parts — row max and Σexp — were computed online in the
-    # kernel; this is one exp and one divide per slot, no segment ops.)
+
+
+def normalize_from_stats(logits, rowmax, rowsum, lrow, trow, *, R, V, K):
+    """The *unfused* normalize epilogue: slot → row stats gather + one exp
+    and one divide per slot.  The GAT hot path does NOT run this — the
+    fused ParamSpMM prologue consumes (logits, rowmax, rowsum) directly.
+    It is the ONE shared α-from-stats implementation (masked-slot −inf /
+    empty-row guard convention): the reference path behind
+    ``sddmm_softmax`` AND the flash-style α recompute in the GAT backward
+    (``core.engine.make_gat_message_fn``) — keep the guards here only."""
     C = trow.shape[0]
     rows = (trow[:, None, None].astype(jnp.int32) * R
             + lrow.reshape(C, 1, K) * V
             + jnp.arange(V, dtype=jnp.int32)[None, :, None])
-    mask = vals != 0
     rm = rowmax.reshape(-1)
     rm = jnp.where(jnp.isfinite(rm), rm, 0.0)          # empty rows
     denom = jnp.maximum(rowsum.reshape(-1), 1e-30)
-    ex = jnp.where(mask, jnp.exp(logits - rm[rows]), 0.0)
-    alpha = ex / denom[rows]
-    return alpha, logits
+    # masked/padding slots carry logit −inf → exp(−inf − finite) = 0 exact
+    return jnp.exp(logits - rm[rows]) / denom[rows]
 
 
-def sddmm_softmax(pcsr: PCSR, Q, K, *, scale: float | None = None,
-                  slope: float = 0.2, interpret: bool = True,
-                  with_logits: bool = False):
-    """Fused GAT attention weights: softmax_row(LeakyReLU(scale·Q·Kᵀ)) on
-    A's sparsity pattern, in PCSR slot layout. Pallas path.
+def sddmm_softmax_stats(pcsr: PCSR, Q, K, *, scale: float | None = None,
+                        slope: float = 0.2, interpret: bool = True):
+    """The fused GAT attention front half, *stats form*: one kernel pass
+    returning ``(logits, rowmax, rowsum)`` — raw post-LeakyReLU logits in
+    slot layout (masked slots −inf) plus the per-row online-softmax
+    statistics, exactly the operands ``paramspmm_with_vals(stats=...)``
+    consumes in its prologue.  No elementwise normalize runs anywhere:
+    the two-kernel GAT forward and the flash-style recompute backward are
+    built on this.
 
-    ``scale`` defaults to 1/√d (dot-product attention).  Returns ``alpha``
-    — or ``(alpha, logits)`` with ``with_logits=True``, where ``logits`` are
-    the masked post-LeakyReLU scores the backward needs for the activation
-    derivative.  Shapes follow ``sddmm``: (C, V, K) per (n, d) inputs,
-    (H, C, V, K) per (H, n, d).
+    ``scale`` defaults to 1/√d.  Shapes: logits (C, V, K) per (n, d)
+    inputs, (H, C, V, K) per (H, n, d); rowmax/rowsum are always the
+    kernel-native ``(H·n_blocks, R)`` (head-tiled blocks).
     """
     Q = jnp.asarray(Q)
     K_mat = jnp.asarray(K)
@@ -114,15 +124,54 @@ def sddmm_softmax(pcsr: PCSR, Q, K, *, scale: float | None = None,
     H = Q.shape[0]
     if scale is None:
         scale = float(1.0 / np.sqrt(Q.shape[-1]))
-    t = pcsr.head_tiled(H)
+    t = pcsr.steering(H)
     cfg = pcsr.config
-    alpha, logits = _fused_call(
+    logits, rowmax, rowsum = _stats_call(
         t["colidx"], t["lrow"], t["trow"], t["init"], t["vals"], Q, K_mat,
         H=H, n_blocks=pcsr.n_blocks, R=cfg.R, W=cfg.W, V=cfg.V, K=pcsr.K,
         dblk=cfg.dblk, scale=float(scale), slope=float(slope),
         interpret=interpret)
-    shape = (H, pcsr.num_chunks, cfg.V, pcsr.K)
-    alpha, logits = alpha.reshape(shape), logits.reshape(shape)
+    logits = logits.reshape(H, pcsr.num_chunks, cfg.V, pcsr.K)
     if single:
-        alpha, logits = alpha[0], logits[0]
+        logits = logits[0]
+    return logits, rowmax, rowsum
+
+
+@functools.partial(jax.jit, static_argnames=("R", "V", "K", "H"))
+def _normalize_heads(logits, rowmax, rowsum, lrow, trow, *, R, V, K, H):
+    f = lambda lg, rm, rs: normalize_from_stats(lg, rm, rs, lrow, trow,
+                                                R=R, V=V, K=K)
+    if H == 1:
+        return f(logits[0], rowmax, rowsum)[None]
+    return jax.vmap(f)(logits, rowmax.reshape(H, -1, R),
+                       rowsum.reshape(H, -1, R))
+
+
+def sddmm_softmax(pcsr: PCSR, Q, K, *, scale: float | None = None,
+                  slope: float = 0.2, interpret: bool = True,
+                  with_logits: bool = False):
+    """Fused GAT attention weights: softmax_row(LeakyReLU(scale·Q·Kᵀ)) on
+    A's sparsity pattern, in PCSR slot layout. Pallas path.
+
+    This is the *materialized-α* form (kernel pass + one elementwise
+    normalize): the reference/unfused path.  The GAT hot path uses
+    ``sddmm_softmax_stats`` + the SpMM softmax prologue instead and never
+    materializes α.  ``scale`` defaults to 1/√d.  Returns ``alpha`` — or
+    ``(alpha, logits)`` with ``with_logits=True``, where ``logits`` are the
+    post-LeakyReLU scores (masked slots −inf).  Shapes follow ``sddmm``:
+    (C, V, K) per (n, d) inputs, (H, C, V, K) per (H, n, d).
+    """
+    Q = jnp.asarray(Q)
+    single = Q.ndim == 2
+    logits, rowmax, rowsum = sddmm_softmax_stats(
+        pcsr, Q, K, scale=scale, slope=slope, interpret=interpret)
+    H = 1 if single else Q.shape[0]
+    cfg = pcsr.config
+    t = pcsr.steering()           # single-head slot→row map suffices: the
+    # head-tiled rows are the single-head rows offset per head
+    lg = logits[None] if single else logits
+    alpha = _normalize_heads(lg, rowmax, rowsum,
+                             jnp.asarray(t["lrow"]), jnp.asarray(t["trow"]),
+                             R=cfg.R, V=cfg.V, K=pcsr.K, H=H)
+    alpha = alpha[0] if single else alpha
     return (alpha, logits) if with_logits else alpha

@@ -3,10 +3,13 @@
 GCN/GIN take a `spmm: (n, d) -> (n, d)` closure over the graph — either a
 ParamSpMM operator (decider-configured) or a baseline path — so "embed
 ParamSpMM into GNN training" is literally swapping this callable, as the
-paper does with its PyTorch extension.  GAT instead takes the fused
-message closure `msg: (Q, K, Vf) -> (n, d)` built by
-``core.engine.make_gat_message_fn`` (SDDMM → softmax → SpMM over the
-same PCSR), mirroring HGL-proto's GSDDMM/GSPMM operator pair.
+paper does with its PyTorch extension.  Closures that additionally expose
+``.fused(B, scale=, bias=, activation=)`` (ParamSpMM / ParamSpMMOperator
+/ DistGraph) get each GCN layer's bias + ReLU handed to the SpMM's fused
+epilogue — one kernel per aggregation on the Pallas backend.  GAT
+instead takes the fused message closure `msg: (Q, K, Vf) -> (n, d)`
+built by ``core.engine.make_gat_message_fn`` (two kernels: SDDMM→softmax
+stats, prologue SpMM), mirroring HGL-proto's GSDDMM/GSPMM operator pair.
 
 The distributed operators plug into the same seams with global shapes:
 ``repro.dist.DistGraph`` is a `(n, d) -> (n, d)` spmm closure and its
@@ -39,11 +42,28 @@ def init_gcn(key, layer_dims):
 
 
 def gcn_forward(params, X, spmm):
+    """One GCN layer is ``relu(Â·H·W + b)``.  When the aggregation closure
+    exposes the epilogue-fusion surface (``spmm.fused`` — ParamSpMM /
+    ParamSpMMOperator / DistGraph), the layer reassociates to
+    ``Â·(H·W)`` and hands bias + activation to the SpMM epilogue: the
+    whole aggregation step is ONE kernel on the Pallas backend (the
+    bias/ReLU passes ride the VMEM-resident output block) instead of
+    kernel + 2–3 XLA elementwise passes over the (n, d) output."""
+    fused = getattr(spmm, "fused", None)
     h = X
     for i, layer in enumerate(params):
-        h = spmm(h) @ layer["w"] + layer["b"]          # Â·H·W
-        if i < len(params) - 1:
-            h = jax.nn.relu(h)
+        last = i == len(params) - 1
+        w = layer["w"]
+        # fuse only when transform-then-aggregate doesn't widen the SpMM:
+        # the epilogue needs the SpMM last, i.e. Â·(H·W) — a win (and the
+        # one-kernel layer) for d_out ≤ d_in, a wider gather otherwise
+        if fused is not None and w.shape[1] <= w.shape[0]:
+            h = fused(h @ w, bias=layer["b"],
+                      activation="none" if last else "relu")
+        else:
+            h = spmm(h) @ w + layer["b"]               # Â·H·W
+            if not last:
+                h = jax.nn.relu(h)
     return h
 
 

@@ -24,7 +24,13 @@ class ParamSpMM:
     ``op`` names the operator the config is chosen for ("spmm", "sddmm",
     or "gat" — the SDDMM+softmax+SpMM attention pair); it steers the
     cost-model search only, since the decider is SpMM-trained (per-operator
-    decider labels remain a ROADMAP item).
+    decider labels remain a ROADMAP item).  ``heads`` prices multi-head
+    attention's head-tiled grids (per-head dim, H× chunks/blocks), so a
+    4-head layer can pick a different ⟨W,F,V,S⟩ than a single-head one.
+
+    The wrapped operator exposes the fusion surface: ``p(B)`` is the plain
+    SpMM, ``p.fused(B, scale=, bias=, activation=)`` the epilogue-fused
+    aggregation (one kernel per GCN layer on the Pallas backend).
     """
 
     def __init__(self, csr: CSRMatrix, dim: int, *,
@@ -35,7 +41,8 @@ class ParamSpMM:
                  interpret: bool = True,
                  build_transpose: bool = True,
                  select: str = "model",
-                 op: str = "spmm"):
+                 op: str = "spmm",
+                 heads: int = 1):
         self.perm = None
         if reorder:                       # paper §4.4: default preprocessing
             perm = rabbit_reorder(csr)
@@ -65,7 +72,8 @@ class ParamSpMM:
                 config = oracle_search(csr, dim, mode="measured",
                                        reps=2).best_config
             else:
-                config, _ = CostModel(csr).best(dim, config_space(dim), op=op)
+                config, _ = CostModel(csr).best(dim, config_space(dim),
+                                                op=op, H=heads)
         self.config = config
         self.op = ParamSpMMOperator(csr, config, backend=backend,
                                     interpret=interpret,
@@ -73,3 +81,7 @@ class ParamSpMM:
 
     def __call__(self, B):
         return self.op(B)
+
+    def fused(self, B, scale=None, bias=None, activation: str = "none"):
+        """Epilogue-fused aggregation: act(scale ⊙ (A·B) + bias)."""
+        return self.op.fused(B, scale=scale, bias=bias, activation=activation)

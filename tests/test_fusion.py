@@ -1,0 +1,348 @@
+"""Prologue/epilogue fusion layer: the two-kernel GAT forward (kernel-count
+asserted), the fused-epilogue GCN aggregation, flash-style recompute
+backward, covered steering arrays, and the head-aware cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel, unfused_penalty
+from repro.core.engine import (ParamSpMMOperator, engine_spmm,
+                               engine_spmm_fused, make_gat_message_fn)
+from repro.core.pcsr import SpMMConfig, build_pcsr, config_space
+from repro.core.sparse import CSRMatrix
+from repro.kernels.paramspmm.ops import paramspmm, paramspmm_with_vals
+from repro.kernels.sddmm.ops import sddmm_softmax, sddmm_softmax_stats
+
+from conftest import random_csr
+from _propcheck import booleans, floats, integers, propcases, sampled_from
+
+
+def _empty_band_csr(rng, n, density, lo, hi):
+    """Matrix with a fully-empty row band → empty PCSR blocks."""
+    A = ((rng.random((n, n)) < density)
+         * rng.standard_normal((n, n))).astype(np.float32)
+    A[lo:hi] = 0.0
+    return CSRMatrix.from_dense(A), A
+
+
+# ------------------------------------------------------- kernel counts
+def _count_pallas_calls(monkeypatch, fn):
+    """The SAME interception `bench_fusion` records into BENCH_spmm.json
+    (benchmarks/common.count_pallas_calls) — one definition of "a kernel
+    launch", so the test assertion and the archived artifact agree."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import count_pallas_calls
+    return count_pallas_calls(fn)
+
+
+def test_gat_forward_is_exactly_two_kernels(rng, monkeypatch):
+    """The acceptance bar: the fused GAT forward launches exactly two
+    Pallas kernels — sddmm_softmax_stats + the prologue SpMM — with no
+    interstitial elementwise normalize (α never materializes)."""
+    csr, _ = random_csr(rng, 37, 0.2)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, 37, 37,
+                   SpMMConfig(V=2, S=True, W=8, F=1))
+    f = make_gat_message_fn(p, backend="pallas", interpret=True)
+    Q = jnp.asarray(rng.standard_normal((37, 11)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((37, 11)), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal((37, 10)), jnp.float32)
+    calls = _count_pallas_calls(monkeypatch, lambda: f(Q, K, Vf))
+    assert len(calls) == 2, calls
+    assert any("sddmm_softmax" in c for c in calls)
+    assert any("_pro" in c for c in calls)      # prologue-fused SpMM
+
+
+def test_gcn_aggregation_is_one_kernel(rng, monkeypatch):
+    """Epilogue fusion: aggregate + degree-scale + bias + ReLU = ONE
+    kernel launch, not kernel + elementwise passes."""
+    csr, A = random_csr(rng, 39, 0.15)
+    op = ParamSpMMOperator(csr, SpMMConfig(V=1, S=False, W=8),
+                           backend="pallas", interpret=True)
+    B = jnp.asarray(rng.standard_normal((39, 13)), jnp.float32)
+    sc = jnp.asarray(rng.random(39), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(13), jnp.float32)
+    calls = _count_pallas_calls(
+        monkeypatch,
+        lambda: op.fused(B, scale=sc, bias=b, activation="relu"))
+    assert len(calls) == 1, calls
+    out = np.asarray(op.fused(B, scale=sc, bias=b, activation="relu"))
+    ref = np.maximum(np.asarray(sc)[:, None] * (A @ np.asarray(B))
+                     + np.asarray(b), 0.0)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------- unvisited-block zeroing
+def test_unvisited_blocks_zeroed_in_kernel_no_mask_pass(rng):
+    """Empty blocks are zeroed by the kernel's own init path via coverage
+    chunks — outputs exact zeros with no post-kernel jnp.where pass."""
+    csr, A = _empty_band_csr(rng, 64, 0.2, 8, 40)
+    B = jnp.asarray(rng.standard_normal((64, 20)), jnp.float32)
+    for cfg in (SpMMConfig(V=2, S=True, W=4), SpMMConfig(V=1, S=False, W=8)):
+        p = build_pcsr(csr.indptr, csr.indices, csr.data, 64, 64, cfg)
+        st = p.steering(covered=True)
+        # coverage really exists and targets every block exactly once
+        assert set(st["trow"].tolist()) == set(range(p.n_blocks))
+        out = np.asarray(paramspmm(p, B, interpret=True))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, A @ np.asarray(B),
+                                   atol=1e-4, rtol=1e-4)
+        assert (out[8:40] == 0).all()
+
+
+@pytest.mark.parametrize("case", propcases(
+    4, n=integers(8, 50), density=floats(0.02, 0.3),
+    v=sampled_from([1, 2]), s=booleans(), h=sampled_from([1, 4]),
+    seed=integers(0, 99)), ids=str)
+def test_covered_steering_prefix_property(case):
+    """Covered arrays = uncovered arrays + appended all-padding chunks
+    (the prefix property the distributed packing slices by)."""
+    rng = np.random.default_rng(case.seed)
+    csr, _ = random_csr(rng, case.n, case.density)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, case.n, case.n,
+                   SpMMConfig(V=case.v, S=case.s, W=8 // case.v))
+    plain, cov = p.steering(case.h), p.steering(case.h, covered=True)
+    per_head = cov["trow"].shape[0] // case.h
+    E = per_head - p.num_chunks
+    assert E == p.n_empty_blocks
+    for key in ("colidx", "lrow", "trow", "init", "fini"):
+        a, b = plain[key], cov[key]
+        stride_a, stride_b = a.shape[0] // case.h, b.shape[0] // case.h
+        for h in range(case.h):               # per head: prefix match
+            np.testing.assert_array_equal(
+                b[h * stride_b:h * stride_b + stride_a],
+                a[h * stride_a:(h + 1) * stride_a])
+    # appended chunks are all-padding, first+last of their (empty) block
+    if E:
+        tail = slice(p.num_chunks, per_head)
+        assert (cov["init"][tail] == 1).all()
+        assert (cov["fini"][tail] == 1).all()
+        assert (cov["vals"].reshape(case.h, per_head, -1)[0, p.num_chunks:]
+                == 0).all()
+    # fini marks exactly one last chunk per targeted block
+    assert cov["fini"].sum() == len(set(cov["trow"].tolist()))
+
+
+# ------------------------------------------------- fused vs engine ref
+@pytest.mark.parametrize("case", propcases(
+    6, n=integers(8, 48), d=sampled_from([8, 40, 130]),
+    density=floats(0.02, 0.3), v=sampled_from([1, 2]),
+    s=booleans(), h=sampled_from([1, 3]), seed=integers(0, 99)), ids=str)
+def test_two_kernel_gat_matches_engine_property(case):
+    """Fused prologue GAT forward == unfused engine path, across split
+    chunks, vector padding, and multi-head batches."""
+    rng = np.random.default_rng(case.seed)
+    csr, _ = random_csr(rng, case.n, case.density)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, case.n, case.n,
+                   SpMMConfig(V=case.v, S=case.s, W=8 // case.v))
+    f_eng = make_gat_message_fn(p, backend="engine")
+    f_pal = make_gat_message_fn(p, backend="pallas", interpret=True)
+    shape = (case.n, case.d) if case.h == 1 else (case.h, case.n, case.d)
+    vshape = (case.n, 6) if case.h == 1 else (case.h, case.n, 6)
+    Q = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    K = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal(vshape), jnp.float32)
+    np.testing.assert_allclose(np.asarray(f_pal(Q, K, Vf)),
+                               np.asarray(f_eng(Q, K, Vf)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_two_kernel_gat_empty_rows_and_masked_edges(rng):
+    """Empty destination rows (garbage stats rows) and explicit-zero
+    (masked) edges must come out exactly as the engine says — the −inf
+    logit convention + prologue guards keep padding at exactly 0."""
+    n = 64
+    A = ((rng.random((n, n)) < 0.2)
+         * rng.standard_normal((n, n))).astype(np.float32)
+    A[8:40] = 0.0
+    rows, cols = np.nonzero(A)
+    vals = A[rows, cols].copy()
+    vals[::5] = 0.0                      # every 5th stored edge masked out
+    csr = CSRMatrix.from_coo(rows, cols, vals, n, n, sum_duplicates=False)
+    Q = jnp.asarray(rng.standard_normal((n, 24)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((n, 24)), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal((n, 12)), jnp.float32)
+    for cfg in (SpMMConfig(V=2, S=True, W=4), SpMMConfig(V=1, S=False, W=8)):
+        p = build_pcsr(csr.indptr, csr.indices, csr.data, n, n, cfg)
+        f_eng = make_gat_message_fn(p, backend="engine")
+        f_pal = make_gat_message_fn(p, backend="pallas", interpret=True)
+        out = np.asarray(f_pal(Q, K, Vf))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, np.asarray(f_eng(Q, K, Vf)),
+                                   atol=1e-4, rtol=1e-4)
+        assert (out[8:40] == 0).all()    # empty rows aggregate nothing
+
+
+@pytest.mark.parametrize("case", propcases(
+    4, n=integers(8, 40), density=floats(0.05, 0.3),
+    v=sampled_from([1, 2]), s=booleans(),
+    act=sampled_from(["none", "relu", "leaky_relu"]),
+    seed=integers(0, 99)), ids=str)
+def test_fused_epilogue_matches_engine_property(case):
+    """Epilogue fusion == engine reference act(scale ⊙ A·B + bias), with
+    empty rows receiving exactly act(bias)."""
+    rng = np.random.default_rng(case.seed)
+    csr, _ = _empty_band_csr(rng, case.n, case.density,
+                             case.n // 4, case.n // 2)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, case.n, case.n,
+                   SpMMConfig(V=case.v, S=case.s, W=8 // case.v))
+    B = jnp.asarray(rng.standard_normal((case.n, 9)), jnp.float32)
+    sc = jnp.asarray(rng.random(case.n) + 0.5, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(9), jnp.float32)
+    out = np.asarray(paramspmm(p, B, scale=sc, bias=b,
+                               activation=case.act, interpret=True))
+    ref = np.asarray(engine_spmm_fused(p, B, scale=sc, bias=b,
+                                       activation=case.act))
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+    # empty rows = act(0 + bias), NOT uninitialized memory
+    band = np.asarray(engine_spmm_fused(
+        p, jnp.zeros_like(B), scale=sc, bias=b, activation=case.act))
+    np.testing.assert_allclose(out[case.n // 4:case.n // 2],
+                               band[case.n // 4:case.n // 2],
+                               atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------- gradients
+def test_fused_gcn_layer_grads_match_engine_and_fd(rng):
+    csr, _ = random_csr(rng, 32, 0.2)
+    cfg = SpMMConfig(V=2, S=True, W=4)
+    ope = ParamSpMMOperator(csr, cfg, backend="engine")
+    opp = ParamSpMMOperator(csr, cfg, backend="pallas", interpret=True)
+    B = jnp.asarray(rng.standard_normal((32, 6)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(6), jnp.float32)
+    sc = jnp.asarray(rng.random(32) + 0.5, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 6)), jnp.float32)
+
+    def loss(op):
+        return lambda B, b: (op.fused(B, scale=sc, bias=b,
+                                      activation="relu") * w).sum()
+
+    ge = jax.grad(loss(ope), (0, 1))(B, b)
+    gp = jax.grad(loss(opp), (0, 1))(B, b)
+    for a, c in zip(ge, gp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=1e-4, rtol=1e-4)
+    # finite differences on a few coordinates of B and bias (small eps:
+    # a large step walks output coordinates across the ReLU kink)
+    lp = loss(opp)
+    eps = 1e-3
+    for ai, arr in enumerate((B, b)):
+        g = np.asarray(gp[ai])
+        flat = np.asarray(arr).reshape(-1)
+        for idx in (0, flat.size // 2, flat.size - 1):
+            up, dn = flat.copy(), flat.copy()
+            up[idx] += eps
+            dn[idx] -= eps
+            args_u = [B, b]
+            args_d = [B, b]
+            args_u[ai] = jnp.asarray(up.reshape(np.shape(arr)))
+            args_d[ai] = jnp.asarray(dn.reshape(np.shape(arr)))
+            fd = (float(lp(*args_u)) - float(lp(*args_d))) / (2 * eps)
+            np.testing.assert_allclose(g.reshape(-1)[idx], fd,
+                                       atol=5e-2, rtol=5e-2)
+
+
+def test_gat_recompute_backward_drops_alpha_residual(rng):
+    """Flash-style recompute: the saved residuals are logits + row stats
+    only — no (C, V, K) α tensor — and the grads still match the engine."""
+    csr, _ = random_csr(rng, 40, 0.15)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, 40, 40,
+                   SpMMConfig(V=2, S=True, W=8))
+    f_pal = make_gat_message_fn(p, backend="pallas", interpret=True)
+    Q = jnp.asarray(rng.standard_normal((40, 16)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((40, 16)), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal((40, 12)), jnp.float32)
+    out, vjp = jax.vjp(f_pal, Q, K, Vf)
+    # residuals: Q, K, Vf mirrors + logits (C, V, K) + 2 stats (nb, R) —
+    # an α-shaped residual would make it 5 slot-shaped tensors, not 4
+    slot_shaped = [x for x in jax.tree_util.tree_leaves(vjp)
+                   if np.shape(x) == (p.num_chunks, p.config.V, p.K)]
+    assert len(slot_shaped) == 1        # the logits — α is NOT stored
+    stats_shaped = [x for x in jax.tree_util.tree_leaves(vjp)
+                    if np.shape(x) == (p.n_blocks, p.config.R)]
+    assert len(stats_shaped) == 2       # rowmax + rowsum
+    f_eng = make_gat_message_fn(p, backend="engine")
+    g_eng = jax.grad(lambda q, k, v: (f_eng(q, k, v) ** 2).sum(),
+                     argnums=(0, 1, 2))(Q, K, Vf)
+    g_pal = vjp(2.0 * out)
+    for a, b in zip(g_eng, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_fully_fused_gat_multihead_grad_finite_differences(rng):
+    """FD check through the 2-kernel forward + recompute backward."""
+    n, d, H = 18, 4, 4
+    csr, _ = random_csr(rng, n, 0.25)
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, n, n,
+                   SpMMConfig(V=2, S=False, W=4))
+    f = make_gat_message_fn(p, backend="pallas", interpret=True)
+    Q = rng.standard_normal((H, n, d)).astype(np.float32)
+    K = rng.standard_normal((H, n, d)).astype(np.float32)
+    Vf = rng.standard_normal((H, n, 3)).astype(np.float32)
+    w = jnp.asarray(rng.standard_normal((H, n, 3)), jnp.float32)
+
+    def loss(q, k, v):
+        return (f(q, k, v) * w).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(Q, K, Vf)
+    eps = 1e-3
+    for ai, arr in enumerate((Q, K, Vf)):
+        g = np.asarray(grads[ai])
+        for idx in [(0, 0, 0), (1, 3, 2),
+                    (H - 1, arr.shape[1] - 1, arr.shape[2] - 1)]:
+            up, dn = arr.copy(), arr.copy()
+            up[idx] += eps
+            dn[idx] -= eps
+            args_u, args_d = [Q, K, Vf], [Q, K, Vf]
+            args_u[ai], args_d[ai] = up, dn
+            fd = (float(loss(*args_u)) - float(loss(*args_d))) / (2 * eps)
+            np.testing.assert_allclose(g[idx], fd, atol=5e-2, rtol=5e-2)
+
+
+# ------------------------------------------------- head-aware pricing
+def test_cost_model_best_gat_differs_across_heads():
+    """Regression for the head-aware cost model: head tiling multiplies
+    C/n_blocks and shrinks the per-head dim, so the optimal F (at least)
+    must be able to change with H."""
+    rng = np.random.default_rng(0)
+    n = 1500
+    A = (rng.random((n, n)) < 0.004)
+    rows, cols = np.nonzero(A)
+    csr = CSRMatrix.from_coo(rows, cols, np.ones(len(rows), np.float32),
+                             n, n)
+    cm = CostModel(csr)
+    space = config_space(512, max_f=4)
+    best = {H: cm.best(512, space, op="gat", H=H)[0] for H in (1, 8)}
+    assert best[1] != best[8], best
+    # and the pricing is strictly head-sensitive, not just rescaled
+    t1 = cm.time(512, best[1], "gat", H=1)
+    t8 = cm.time(512, best[1], "gat", H=8)
+    assert t8 > t1
+
+
+def test_cost_model_fusion_savings_positive():
+    rng = np.random.default_rng(1)
+    csr, _ = random_csr(rng, 300, 0.05)
+    cm = CostModel(csr)
+    cfg = SpMMConfig(V=1, S=True, W=8)
+    assert cm.fusion_savings(64, cfg, op="gat") > 0
+    assert cm.fusion_savings(64, cfg, op="spmm") > 0
+    assert (cm.time(64, cfg, "gat", fused=False)
+            == pytest.approx(cm.time(64, cfg, "gat")
+                             + unfused_penalty(cm.stats(1, 8), 64, cfg,
+                                               "gat")))
+
+
+def test_fused_gat_pipeline_prices_per_head_config(rng):
+    """ParamSpMM(op='gat', heads=H) feeds H into the cost model."""
+    from repro.pipeline import ParamSpMM
+    csr, _ = random_csr(rng, 200, 0.08)
+    p1 = ParamSpMM(csr, 256, reorder=False, op="gat", heads=1)
+    p8 = ParamSpMM(csr, 256, reorder=False, op="gat", heads=8)
+    cm = CostModel(csr)
+    space = config_space(256)
+    assert p1.config == cm.best(256, space, op="gat", H=1)[0]
+    assert p8.config == cm.best(256, space, op="gat", H=8)[0]
