@@ -1,26 +1,38 @@
-"""Distributed SpMM scaling + per-partition adaptive-config table.
+"""Distributed SpMM/GAT scaling, per-partition configs, overlap column.
 
-Two claims measured (the cross-shard form of the paper's adaptivity
+Three claims measured (the cross-shard form of the paper's adaptivity
 argument):
 
 * **per-partition configs differ** — on a power-law graph the
   balanced-nnz shards have different density/CV, so ``CostModel.best``
-  picks different ⟨W,F,V,S⟩ per shard; the table rows record each
-  shard's choice plus its predicted time, and ``adaptive_gain`` compares
-  the predicted makespan (max over shards) against forcing the single
-  best *global* config onto every shard — the one-size-fits-all failure
-  mode, quantified.
-* **scaling** — wall-clock of `dist_spmm` for every partition count the
-  host's device mesh can hold (CPU: run under
+  picks different ⟨W,F,V,S⟩ per shard (priced per ``--heads`` for the
+  attention pipeline); the table rows record each shard's choice plus
+  its predicted time, and ``adaptive_gain`` compares the predicted
+  makespan (max over shards) against forcing the single best *global*
+  config onto every shard — the one-size-fits-all failure mode,
+  quantified.
+* **halo/compute overlap** — per partition count, the ``overlap`` rows
+  price the decomposition (local/halo sub-SpMM times + the
+  ``halo_exchange_cost`` wire time → serialized vs overlapped schedule)
+  and, when the host mesh is big enough, *measure* ``dist_spmm`` with
+  ``overlap=False`` vs ``overlap=True`` — the on/off column.
+* **scaling** — wall-clock of ``dist_spmm`` for every partition count
+  the host's device mesh can hold (CPU: run under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); partition
   counts beyond the device count fall back to cost-model makespans so
   the curve is always complete.
+
+``run`` returns the structured metrics dict ``benchmarks/run.py --json``
+folds into ``BENCH_spmm.json`` (the perf-trajectory artifact ci.sh
+archives), so dist perf is tracked alongside kernel perf.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import CostModel, config_space
+from repro.core.cost_model import (halo_exchange_cost,
+                                   overlap_exposed_cost)
 from repro.data.graphs import er, rmat
 
 
@@ -30,21 +42,40 @@ def _predicted_makespan(graph, configs) -> float:
                for s, c in zip(graph.part.shards, configs))
 
 
-def run(dim: int = 64, parts=(1, 2, 4, 8)):
+def _overlap_prediction(g_ov) -> dict:
+    """Priced overlap schedule: per shard, local/halo sub-SpMM times +
+    the gather wire time → max over shards of serialized vs overlapped."""
+    serial = hidden = 0.0
+    exch = halo_exchange_cost(g_ov.halo.gathered_rows, g_ov.dim)
+    for (loc, hal), (lc, hc) in zip(g_ov._split_csrs,
+                                    g_ov.overlap_configs):
+        t_loc = CostModel(loc).time(g_ov.dim, lc)
+        t_hal = CostModel(hal).time(g_ov.dim, hc)
+        serial = max(serial, t_loc + t_hal + exch)
+        hidden = max(hidden, overlap_exposed_cost(t_loc, t_hal, exch))
+    return {"exchange_us": exch * 1e6, "serialized_us": serial * 1e6,
+            "overlapped_us": hidden * 1e6,
+            "predicted_gain": serial / max(hidden, 1e-12)}
+
+
+def run(dim: int = 64, parts=(1, 2, 4, 8), heads: int = 1):
     import jax
     import jax.numpy as jnp
 
     from benchmarks.common import emit
     from repro.core.autotune import time_fn
-    from repro.dist import DistGraph, dist_spmm
+    from repro.dist import DistGraph, dist_gat_message, dist_spmm
 
     graphs = [("rmat13", rmat(13, 8, seed=1)), ("er8k", er(8192, 8, seed=2))]
     ndev = jax.device_count()
     rng = np.random.default_rng(0)
+    metrics: dict = {"dim": dim, "heads": heads, "graphs": {}}
 
     for name, csr in graphs:
         B = jnp.asarray(rng.standard_normal((csr.n_rows, dim)), jnp.float32)
-        global_cfg, _ = CostModel(csr).best(dim, config_space(dim))
+        global_cfg, _ = CostModel(csr).best(dim, config_space(dim), H=heads)
+        gm: dict = {"parts": {}}
+        metrics["graphs"][name] = gm
         for n_parts in parts:
             if n_parts > csr.n_rows:
                 continue
@@ -52,28 +83,77 @@ def run(dim: int = 64, parts=(1, 2, 4, 8)):
             # + per-shard configs) is exercised — DistGraph touches no
             # devices until its first call
             measurable = n_parts <= ndev
-            g = DistGraph(csr, dim, n_parts, strategy="balanced")
+            g = DistGraph(csr, dim, n_parts, strategy="balanced",
+                          heads=heads)
             for i, (s, c) in enumerate(zip(g.part.shards, g.configs)):
                 w, f, v, sw = c.astuple()
                 emit(f"dist/{name}/p{n_parts}/shard{i}",
                      g.predicted_times[i] * 1e6,
                      f"rows={s.n_local_rows};nnz={s.csr.nnz};"
-                     f"halo={s.n_halo};W={w};F={f};V={v};S={int(sw)}")
+                     f"halo={s.n_halo};W={w};F={f};V={v};S={int(sw)};"
+                     f"H={heads}")
             adaptive = _predicted_makespan(g, g.configs)
             uniform = _predicted_makespan(g, [global_cfg] * n_parts)
             emit(f"dist/{name}/p{n_parts}/adaptive_gain", adaptive * 1e6,
                  f"uniform_us={uniform * 1e6:.1f};"
                  f"gain={uniform / max(adaptive, 1e-12):.3f};"
                  f"n_unique_cfgs={len(set(g.configs))}")
+            pm: dict = {
+                "adaptive_us": adaptive * 1e6,
+                "uniform_us": uniform * 1e6,
+                "n_unique_cfgs": len(set(g.configs)),
+                "shard_configs": [c.astuple() for c in g.configs],
+            }
+            gm["parts"][n_parts] = pm
+
+            # ------------------------------------- overlap on/off column
+            g_ov = DistGraph(csr, dim, n_parts, strategy="balanced",
+                             heads=heads, overlap=True)
+            ov = _overlap_prediction(g_ov)
+            pm["overlap"] = ov
             if measurable:
-                t = time_fn(lambda b: dist_spmm(g, b), B, reps=3)
-                emit(f"dist/{name}/p{n_parts}/measured", t * 1e6,
+                t_off = time_fn(lambda b: dist_spmm(g, b), B, reps=3)
+                t_on = time_fn(lambda b: dist_spmm(g_ov, b), B, reps=3)
+                ov["measured_off_us"] = t_off * 1e6
+                ov["measured_on_us"] = t_on * 1e6
+                emit(f"dist/{name}/p{n_parts}/overlap", t_on * 1e6,
+                     f"off_us={t_off * 1e6:.1f};"
+                     f"predicted_gain={ov['predicted_gain']:.3f};"
+                     f"exchange_us={ov['exchange_us']:.1f}")
+                pm["measured_us"] = t_off * 1e6
+                emit(f"dist/{name}/p{n_parts}/measured", t_off * 1e6,
                      f"devices={ndev}")
             else:
+                emit(f"dist/{name}/p{n_parts}/overlap_predicted",
+                     ov["overlapped_us"],
+                     f"serialized_us={ov['serialized_us']:.1f};"
+                     f"predicted_gain={ov['predicted_gain']:.3f}")
                 emit(f"dist/{name}/p{n_parts}/predicted_makespan",
                      adaptive * 1e6, f"needs_{n_parts}_devices")
 
+            # ----------------------------- multi-head distributed GAT
+            if heads > 1 and measurable and name == "rmat13":
+                gg = DistGraph(csr, dim, n_parts, strategy="balanced",
+                               op="gat", heads=heads)
+                d_h = max(1, dim // heads)
+                Q = jnp.asarray(rng.standard_normal(
+                    (heads, csr.n_rows, d_h)), jnp.float32)
+                t_gat = time_fn(
+                    lambda q: dist_gat_message(gg, q, Q, Q), Q, reps=2)
+                emit(f"dist/{name}/p{n_parts}/gat_h{heads}",
+                     t_gat * 1e6, f"d_head={d_h}")
+                pm["gat_measured_us"] = t_gat * 1e6
+    return metrics
+
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--heads", type=int, default=1,
+                    help="head count the per-shard configs are priced "
+                    "for (and, with a mesh, the measured dist GAT)")
+    ap.add_argument("--dim", type=int, default=64)
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(dim=args.dim, heads=args.heads)

@@ -10,16 +10,18 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   fig5   — GCN/GIN end-to-end training            [paper Fig. 5]
   kernel — Pallas-kernel roofline terms           [§Roofline]
   sddmm  — SDDMM + fused GAT message timings      [attention extension]
-  dist   — partitioned SpMM scaling + per-shard   [distributed extension]
-           adaptive-config table
+  dist   — partitioned SpMM/GAT scaling, per-     [distributed extension]
+           shard adaptive-config table, halo/
+           compute overlap on/off column
   fusion — kernel/elementwise-pass counts +       [fusion extension]
            fused-vs-unfused pricing
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_spmm.json`` (default path): every emitted CSV row plus the
-fusion section's structured metrics (kernel counts, elementwise-pass
-counts, per-config fused/unfused times) — the perf-trajectory artifact
-CI archives from PR 4 on.
+fusion AND dist sections' structured metrics (kernel counts,
+elementwise-pass counts, per-config fused/unfused times, per-shard
+configs, overlap on/off timings) — the perf-trajectory artifact CI
+archives from PR 4 on (dist folded in from PR 5).
 """
 from __future__ import annotations
 
@@ -68,8 +70,8 @@ def main(argv=None):
             decider = fn()
         elif key == "table4":
             bench_speedups.run(decider)
-        elif key == "fusion":
-            extras["fusion"] = fn()
+        elif key in ("fusion", "dist"):    # structured metrics → JSON
+            extras[key] = fn()
         else:
             fn()
         emit(f"{key}/__elapsed", (time.time() - t0) * 1e6, "")

@@ -1,6 +1,7 @@
 #!/usr/bin/env python
 """Docs check: every ``repro.*`` symbol referenced in README.md and
-docs/*.md must actually exist.
+docs/*.md must actually exist — and the subsystem guides must COVER
+their subsystem's public API.
 
 Two kinds of references are verified:
 
@@ -9,6 +10,11 @@ Two kinds of references are verified:
 * dotted names in inline code or prose (`repro.core.engine.make_gat_message_fn`,
   including a trailing call like ``ParamSpMM(csr, ...)`` stripped) —
   resolved as the longest importable module prefix + ``getattr`` chain.
+
+Plus the reverse direction (``COVERAGE``): a guide mapped to a package
+must mention every name in that package's ``__all__`` — so a new public
+symbol in ``repro.dist`` fails CI until DISTRIBUTED.md documents it,
+the same bar OPERATORS.md sets for the operator surface.
 """
 from __future__ import annotations
 
@@ -24,6 +30,9 @@ FENCE = re.compile(r"```(?:\w*)\n(.*?)```", re.S)
 FROM_IMPORT = re.compile(r"^\s*from\s+(repro[\w.]*)\s+import\s+(.+)$", re.M)
 PLAIN_IMPORT = re.compile(r"^\s*import\s+(repro[\w.]*)", re.M)
 DOTTED = re.compile(r"`(repro(?:\.\w+)+)")
+
+# guide → package whose entire ``__all__`` the guide must mention
+COVERAGE = {"DISTRIBUTED.md": "repro.dist"}
 
 
 def resolve(dotted: str) -> bool:
@@ -57,15 +66,31 @@ def refs_in(text: str):
     return refs
 
 
+def coverage_gaps(fname: str, text: str):
+    """Public names of the mapped package the guide fails to mention."""
+    pkg = COVERAGE.get(fname)
+    if pkg is None:
+        return []
+    mod = importlib.import_module(pkg)
+    return [f"{pkg}.{name}" for name in getattr(mod, "__all__", [])
+            if not re.search(rf"\b{re.escape(name)}\b", text)]
+
+
 def main() -> int:
     files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
     failures = []
     for f in files:
-        for ref in sorted(refs_in(f.read_text())):
+        text = f.read_text()
+        for ref in sorted(refs_in(text)):
             if not resolve(ref):
-                failures.append((f.name, ref))
-    for fname, ref in failures:
-        print(f"DOCS FAIL {fname}: unresolved symbol {ref}")
+                failures.append((f.name, f"unresolved symbol {ref}"))
+        for gap in coverage_gaps(f.name, text):
+            failures.append((f.name, f"public symbol {gap} undocumented"))
+    for name in COVERAGE:
+        if not any(f.name == name for f in files):
+            failures.append((name, "coverage-mapped guide missing"))
+    for fname, why in failures:
+        print(f"DOCS FAIL {fname}: {why}")
     print(f"check_docs: {'FAIL' if failures else 'OK'} "
           f"({len(files)} files)")
     return 1 if failures else 0

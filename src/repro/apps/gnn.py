@@ -6,7 +6,11 @@ SDDMM→softmax→SpMM message function over the same PCSR.
 ``--partitions N`` (or ``train_gnn(partitions=N)``) swaps the
 single-device operator for the distributed one (``repro.dist``): the
 graph is row-partitioned over an N-device mesh and every shard runs its
-own cost-model-selected ⟨W,F,V,S⟩ configuration."""
+own cost-model-selected ⟨W,F,V,S⟩ configuration — priced per head count
+for GAT (``--heads`` works distributed: every head batches through one
+head-tiled SPMD program).  ``--overlap`` turns on the halo/compute
+overlap decomposition for the SpMM aggregations (see
+docs/DISTRIBUTED.md)."""
 from __future__ import annotations
 
 import argparse
@@ -63,22 +67,27 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
               n_layers: int = 5, steps: int = 100, lr: float = 5e-3,
               spmm_mode: str = "paramspmm", seed: int = 0, heads: int = 1,
               partitions: int = 0, partition_strategy: str = "balanced",
-              fused: bool = True,
+              overlap: bool = False, fused: bool = True,
               spmm_kwargs: dict | None = None) -> GNNTrainResult:
     """``fused=True`` (default) lets GCN layers hand bias + ReLU to the
     SpMM's fused epilogue (one kernel per aggregation on the Pallas
     backend); ``fused=False`` keeps the classic ``spmm(h) @ W + b`` order
     — bit-identical to the baseline backends, which never fuse."""
     kw = dict(spmm_kwargs or {})
+    if partitions and overlap and model != "gat":
+        # GAT's attention chain never takes the overlap path (see
+        # DistGraph) — don't build the unused local/halo decomposition
+        kw.setdefault("overlap", True)
     if model == "gat":
         if spmm_mode != "paramspmm":
             raise ValueError("gat needs the PCSR message fn "
                              "(spmm_mode='paramspmm')")
         # pick the config for the SDDMM+SpMM pair, not the SpMM alone —
-        # priced per head count (head tiling changes the optimal F)
+        # priced per head count (head tiling changes the optimal F);
+        # DistGraph takes the same op/heads kwargs for per-shard selection
         kw.setdefault("op", "gat")
+        kw.setdefault("heads", heads)
         if not partitions:
-            kw.setdefault("heads", heads)
             # engine backward is native autodiff; the Pallas backward runs
             # its dK/dVf SpMMs on the operator's cached transpose PCSR
             kw.setdefault("build_transpose",
@@ -115,9 +124,9 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
         params = init_gat(key, dims, heads=heads)
         fwd = functools.partial(gat_forward, heads=heads)
         if partitions:
-            if heads != 1:
-                raise ValueError("distributed GAT is single-head")
-            spmm = spmm.gat_message        # DistGraph's sharded message fn
+            # DistGraph's sharded message fn: single-head (n, d) or
+            # multi-head (H, n, d) stacks, one SPMD program either way
+            spmm = spmm.gat_message
         else:
             # the message fn aggregates instead of the plain-SpMM closure,
             # over the very same PCSR (+ transpose PCSR) the pipeline built
@@ -164,6 +173,9 @@ def main(argv=None):
                     "(0 = single-device)")
     ap.add_argument("--partition-strategy", default="balanced",
                     choices=["contiguous", "balanced"])
+    ap.add_argument("--overlap", action="store_true",
+                    help="hide the halo all_gather behind the shard-local "
+                    "SpMM (DistGraph(overlap=True); needs --partitions)")
     ap.add_argument("--spmm", default="paramspmm",
                     choices=["paramspmm", "cusparse", "gespmm"])
     ap.add_argument("--hidden", type=int, default=64)
@@ -178,7 +190,8 @@ def main(argv=None):
                     n_layers=args.layers, steps=args.steps,
                     spmm_mode=args.spmm, heads=args.heads, seed=args.seed,
                     partitions=args.partitions,
-                    partition_strategy=args.partition_strategy)
+                    partition_strategy=args.partition_strategy,
+                    overlap=args.overlap)
     print(f"val_acc={res.val_acc:.3f} "
           f"ms_per_step={res.seconds_per_step * 1e3:.1f}")
     cfgs = res.config if isinstance(res.config, list) else [res.config]

@@ -243,3 +243,31 @@ class CostModel:
 def useful_flops(nnz: int, dim: int) -> float:
     """MAC count of the mathematical SpMM (2·nnz·dim)."""
     return 2.0 * nnz * dim
+
+
+# --------------------------------------------------- distributed terms
+ICI_BW = 100e9            # B/s per-link interconnect (TPU v5e ICI, ~1D ring)
+COLLECTIVE_LATENCY = 1e-6  # s per collective not hidden by compute
+
+
+def halo_exchange_cost(gathered_rows: int, dim: int,
+                       dtype_bytes: int = DTYPE_BYTES) -> float:
+    """Seconds one compacted halo ``all_gather`` keeps the interconnect
+    busy: every shard receives the full ``(P·max_send, dim)`` send
+    buffer, so the wire time is its byte count over the ICI bandwidth
+    plus a fixed collective-launch latency.  This is the term the
+    overlap path (``DistGraph(overlap=True)``) hides behind the
+    shard-local SpMM — ``bench_dist`` reports it next to the local
+    sub-matrix's predicted compute time so the "is the gather actually
+    hideable" question is priced, not assumed."""
+    return (gathered_rows * dim * dtype_bytes) / ICI_BW + COLLECTIVE_LATENCY
+
+
+def overlap_exposed_cost(local_time: float, halo_time: float,
+                         exchange_time: float) -> float:
+    """Predicted per-shard step time under the overlap decomposition:
+    the gather runs concurrently with the local SpMM (whichever is
+    longer bounds), then the halo sub-SpMM runs on the landed rows.
+    Compare against ``local_time + halo_time + exchange_time`` (the
+    serialized schedule) for the predicted overlap win."""
+    return max(local_time, exchange_time) + halo_time

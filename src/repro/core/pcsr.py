@@ -174,6 +174,16 @@ class PCSR:
         ``steering(covered=True)`` — are all-padding)."""
         return self.n_blocks - len(np.unique(self.trow))
 
+    @property
+    def covered_num_chunks(self) -> int:
+        """Per-head chunk count of the *covered* steering arrays
+        (``num_chunks`` real chunks + one all-padding coverage chunk per
+        empty block).  The distributed branches slice the mesh-packed
+        covered arrays with this; the per-head layout puts the real
+        chunks first (prefix property), so ``[:num_chunks]`` of each
+        head's segment recovers the uncovered arrays."""
+        return self.num_chunks + self.n_empty_blocks
+
     def steering(self, H: int = 1, covered: bool = False):
         """Steering arrays for the kernels (cached per (H, covered)).
 

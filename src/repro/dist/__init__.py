@@ -1,24 +1,34 @@
 """Distributed graph-operator subsystem: partitioned PCSR + shard_map
 SpMM/GAT with per-partition adaptive ⟨W,F,V,S⟩ configurations.
 
-Layers (see docs/ARCHITECTURE.md §Distributed execution):
+Layers (see docs/DISTRIBUTED.md and docs/ARCHITECTURE.md §Distributed
+execution):
 
 * ``partition`` — 1D row partitioning (contiguous / balanced-nnz) into
-  per-shard local CSRs with compact halo column maps;
+  per-shard local CSRs with compact halo column maps, plus the
+  local/halo edge split the overlap path executes;
 * ``halo``      — compacted halo feature exchange (+ gradient
   scatter-back) over the ``("parts",)`` device mesh;
-* ``spmm``      — ``DistGraph`` / ``dist_spmm`` / ``dist_gat_message``:
-  one SPMD ``shard_map`` program whose per-shard branches run the
-  existing engine/Pallas kernels under shard-specific configs.
+* ``packing``   — mesh plumbing: the shared ``shard_map`` wrapper and
+  the per-shard (head-tiled) covered steering packs;
+* ``spmm``      — ``DistGraph`` / ``dist_spmm``: one SPMD ``shard_map``
+  program whose per-shard branches run the existing engine/Pallas
+  kernels under shard-specific configs, with optional halo/compute
+  overlap (``DistGraph(overlap=True)``);
+* ``gat``       — ``dist_gat_message``: the multi-head distributed GAT
+  message — two Pallas kernels per shard forward, all-Pallas
+  flash-recompute backward with halo gradient scatter-back.
 """
 from .halo import HaloSpec, build_halo, halo_exchange, halo_scatter_back
+from .packing import PackedShards, pack_shards
 from .partition import (RowPartition, Shard, partition_bounds,
-                        partition_csr, unpartition_rows)
-from .spmm import DistGraph, dist_gat_message, dist_spmm, pack_shards
+                        partition_csr, split_local_halo, unpartition_rows)
+from .spmm import DistGraph, dist_gat_message, dist_spmm
 
 __all__ = [
     "RowPartition", "Shard", "partition_bounds", "partition_csr",
-    "unpartition_rows",
+    "split_local_halo", "unpartition_rows",
     "HaloSpec", "build_halo", "halo_exchange", "halo_scatter_back",
-    "DistGraph", "dist_spmm", "dist_gat_message", "pack_shards",
+    "DistGraph", "dist_spmm", "dist_gat_message",
+    "PackedShards", "pack_shards",
 ]

@@ -1,0 +1,428 @@
+"""Distributed GAT message: multi-head shards + an all-Pallas backward.
+
+The single-device GAT hot path (``core.engine.make_gat_message_fn``) is a
+two-kernel forward — fused SDDMM→softmax *stats* kernel feeding the
+ParamSpMM softmax *prologue* — with a flash-style recompute backward
+whose heavy ops are three more kernels over the forward and transpose
+PCSRs.  This module runs exactly that pipeline **per shard inside one
+SPMD ``shard_map`` program**, multi-head:
+
+* **forward** — K/Vf are halo-exchanged jointly (one ``all_gather``
+  serves every head of both operands: heads travel merged as
+  ``(rows, H·d)`` columns), then each shard's branch splits the heads
+  and batches them through its OWN head-tiled steering arrays
+  (``PCSR.steering(H, covered=True)``, packed per partition by
+  ``packing.pack_shards(H=)``) — exactly two Pallas kernels per shard,
+  α never in HBM, one compilation for the whole head batch.
+* **backward** — a ``custom_vjp`` (Pallas backend): residuals are the
+  primals plus the per-shard raw logits and ``(H·n_blocks, R)`` row
+  stats (flash-style — no α residual); the backward shard_map program
+  re-exchanges the K/Vf halo (recompute over memory), recomputes α from
+  the stats, runs dα-SDDMM, dQ-SpMM and the transpose-PCSR dK/dVf SpMMs
+  as Pallas kernels, and scatters the halo blocks of dK/dVf back to
+  their owner shards through ``halo_scatter_back`` — no engine fallback
+  anywhere (enforced by test).
+
+Row partitioning keeps every destination row's full edge set on one
+shard, so the softmax — forward stats and backward vjp alike — never
+communicates; only the operand halo exchange and the gradient
+scatter-back cross the mesh.
+
+The engine backend keeps the natively-differentiable pure-JAX pipeline
+(vmapped over heads); its halo gradients flow back through the autodiff
+transpose of ``all_gather`` (a ``psum_scatter``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (_engine, _engine_sddmm, _slot_rows,
+                               attend_scores)
+from repro.core.pcsr import slot_transfer_map, transpose_pcsr
+
+from .halo import halo_exchange, halo_scatter_back
+from .packing import AXIS, PackedShards, pack_shards, shard_map_2d
+
+# transfer-map padding: out-of-bounds target slots are dropped by the
+# scatter (mode="drop"), so padded map entries can never alias real slots
+T_SENTINEL = np.int32(2**31 - 1)
+
+
+def head_split(x2, H: int):
+    """(n, H·d) merged mesh layout → (H, n, d) head stack."""
+    n = x2.shape[0]
+    return x2.reshape(n, H, -1).transpose(1, 0, 2)
+
+
+def head_merge(x3):
+    """(H, n, d) head stack → (n, H·d) merged mesh layout."""
+    H, n, d = x3.shape
+    return x3.transpose(1, 0, 2).reshape(n, H * d)
+
+
+def _uncov(a, per: int, H: int, Cc: int, C: int):
+    """Recover the uncovered H-tiled array from a covered one: per head,
+    the real chunks are the ``[:C·per]`` prefix of that head's
+    ``Cc·per``-long segment (coverage chunks pack last)."""
+    return a[:H * Cc * per].reshape(H, Cc * per)[:, :C * per].reshape(-1)
+
+
+@dataclass
+class GatShardPack:
+    """Head-tiled covered steering packs for the distributed GAT.
+
+    ``fwd`` packs every shard's ``steering(H, covered=True)`` arrays;
+    ``logits_pad``/``stats_pad`` are the uniform residual widths the
+    forward branches pad their (per-shard-sized) logits and row stats to
+    so they cross the ``shard_map`` boundary as stacked ``(P, ·)``
+    tensors.  The backward side — transpose PCSRs packed the same way
+    plus the per-edge slot transfer maps — is built lazily on the first
+    backward trace (forward-only use never pays for it)."""
+
+    H: int
+    fwd: PackedShards
+    logits_pad: int              # max over shards of H·C·V·K
+    stats_pad: int               # max over shards of H·n_blocks·R
+    bwd: Optional[PackedShards] = None    # transpose PCSRs (lazy)
+    f_idx: Optional[jnp.ndarray] = None   # (P, L) A-layout slot positions
+    t_idx: Optional[jnp.ndarray] = None   # (P, L) Aᵀ-layout positions
+
+
+def build_gat_pack(pcsrs, H: int,
+                   fwd: Optional[PackedShards] = None) -> GatShardPack:
+    """Pack the shards' head-tiled covered steering for one head count.
+    Pass an existing H=1 pack as ``fwd`` to reuse it (the single-head
+    covered arrays are identical — no second device-resident copy)."""
+    return GatShardPack(
+        H, fwd if fwd is not None else pack_shards(pcsrs, H=H),
+        logits_pad=max(H * p.num_chunks * p.config.V * p.K for p in pcsrs),
+        stats_pad=max(H * p.n_blocks * p.config.R for p in pcsrs))
+
+
+def ensure_gat_bwd_pack(pack: GatShardPack) -> None:
+    """Build the transpose-PCSR pack + slot transfer maps (idempotent)."""
+    if pack.bwd is not None:
+        return
+    pts = [transpose_pcsr(p) for p in pack.fwd.pcsrs]
+    maps = [slot_transfer_map(p, pt)
+            for p, pt in zip(pack.fwd.pcsrs, pts)]
+    P = len(pts)
+    L = max([m[0].size for m in maps] + [1])
+    f = np.zeros((P, L), np.int32)
+    t = np.full((P, L), T_SENTINEL, np.int32)
+    for i, (fi, ti) in enumerate(maps):
+        f[i, :fi.size] = fi
+        t[i, :ti.size] = ti
+    pack.bwd = pack_shards(pts, H=pack.H)
+    # built lazily on the first backward trace — keep the cached maps
+    # concrete so later traces can reuse them (see packing.pack_shards)
+    with jax.ensure_compile_time_eval():
+        pack.f_idx, pack.t_idx = jnp.asarray(f), jnp.asarray(t)
+
+
+# ------------------------------------------------------------ branches
+def _engine_fwd_branch(pcsr, *, H: int, n_out: int, slope: float):
+    """Pure-JAX per-shard branch: SDDMM → attend → SpMM, vmapped over
+    heads.  Natively differentiable — the engine backend's whole
+    distributed GAT program is plain autodiff."""
+    cfg = pcsr.config
+    C, K, V, R, nb = pcsr.num_chunks, pcsr.K, cfg.V, cfg.R, pcsr.n_blocks
+    S, VS = C * K, C * V * K
+
+    def branch(colidx, lrow, trow, init, fini, vals, q2, kx2, vfx2):
+        ci, lr, tr = colidx[:S], lrow[:S], trow[:C]
+        vv = vals[:VS].reshape(C, V, K)
+        rows = _slot_rows(lr, tr, V=V, R=R, K=K)
+
+        def one(qh, kh, vfh):
+            scores = _engine_sddmm(ci, lr, tr, vv, qh, kh, V=V, R=R, K=K)
+            alpha = attend_scores(scores, vv != 0, rows, nb * R,
+                                  dim_k=qh.shape[1], slope=slope)
+            return _engine(ci, lr, tr, alpha, vfh, V=V, R=R, K=K,
+                           n_blocks=nb, n_rows=n_out)
+
+        out = jax.vmap(one)(head_split(q2, H), head_split(kx2, H),
+                            head_split(vfx2, H))
+        return head_merge(out)
+    return branch
+
+
+def _pallas_fwd_branch(pcsr, *, H: int, n_out: int, slope: float,
+                       interpret: bool, logits_pad: int, stats_pad: int):
+    """The two-kernel fused forward with shard-static shapes: fused
+    SDDMM→softmax-stats kernel, then the ParamSpMM softmax-prologue
+    kernel over the covered head-tiled steering — α never materializes.
+    Returns (out, logits, rowmax, rowsum), the latter three padded to
+    the pack-uniform residual widths (flash-style backward inputs)."""
+    from repro.kernels.paramspmm.kernel import paramspmm_kernel
+    from repro.kernels.paramspmm.ops import _pad_chunk_vals, _pad_cols
+    from repro.kernels.sddmm.kernel import sddmm_softmax_kernel
+    from repro.kernels.sddmm.ops import _pad_q
+
+    cfg = pcsr.config
+    C, K, V, W = pcsr.num_chunks, pcsr.K, cfg.V, cfg.W
+    nb, R, dblk = pcsr.n_blocks, cfg.R, cfg.dblk
+    Cc = pcsr.covered_num_chunks
+
+    def branch(colidx, lrow, trow, init, fini, vals, q2, kx2, vfx2):
+        q, kx, vfx = (head_split(x, H) for x in (q2, kx2, vfx2))
+        da, dv = q.shape[2], vfx.shape[2]
+        # kernel 1: fused SDDMM → logits + online-softmax row stats, over
+        # the uncovered head-tiled steering (stats of visited blocks only)
+        Qp = _pad_q(q, nb * R, dblk).reshape(H * nb * R, -1)
+        Kp, _ = _pad_cols(kx.reshape(-1, da), dblk)
+        logits, rowmax, rowsum = sddmm_softmax_kernel(
+            _uncov(colidx, K, H, Cc, C), _uncov(lrow, K, H, Cc, C),
+            _uncov(trow, 1, H, Cc, C), _uncov(init, 1, H, Cc, C),
+            vals[:H * Cc * V * K].reshape(H, Cc, V, K)[:, :C]
+            .reshape(H * C, V, K),
+            Qp, Kp, n_blocks=H * nb, W=W, V=V, K=K, dblk=dblk,
+            scale=float(1.0 / np.sqrt(da)), slope=slope,
+            interpret=interpret)
+        # kernel 2: prologue SpMM — logits in, α rebuilt in-register;
+        # coverage chunks carry −inf logits (exact α = 0)
+        lg = _pad_chunk_vals(logits.reshape(H, C, V, K), Cc - C, -jnp.inf)
+        Bp, _ = _pad_cols(vfx.reshape(-1, dv), dblk)
+        out = paramspmm_kernel(
+            colidx[:H * Cc * K], lrow[:H * Cc * K], trow[:H * Cc],
+            init[:H * Cc], fini[:H * Cc], lg.reshape(H * Cc, V, K), Bp,
+            n_blocks=H * nb, R=R, V=V, K=K, dblk=dblk,
+            rowmax=rowmax, rowsum=rowsum, interpret=interpret)
+        out = out[:, :dv].reshape(H, nb * R, dv)[:, :n_out]
+        pad1 = lambda x, L: jnp.pad(x.reshape(-1), (0, L - x.size))[None, :]
+        return (head_merge(out), pad1(logits, logits_pad),
+                pad1(rowmax, stats_pad), pad1(rowsum, stats_pad))
+    return branch
+
+
+def _pallas_bwd_branch(pcsr, pcsr_t, *, H: int, n_out: int, slope: float,
+                       interpret: bool):
+    """The flash-style all-Pallas per-shard backward: α recomputed from
+    the (logits, row-stats) residuals, then
+
+        dα   = SDDMM(pcsr, dOut, Vf_ext)        [Pallas]
+        dx   = α ⊙ (dα − Σ_row α·dα)            (softmax vjp, per slot)
+        de   = dx · scale · LeakyReLU'(logits)
+        dQ   = SpMM(pcsr,  de, K_ext)           [Pallas]
+        dK   = SpMM(pcsrᵀ, deᵀ, Q)              [Pallas, transpose PCSR]
+        dVf  = SpMM(pcsrᵀ, αᵀ, dOut)            [Pallas, transpose PCSR]
+
+    — the same pipeline as the single-device vjp, with slot tensors moved
+    onto the transpose layout through the packed transfer maps.  dK/dVf
+    come back over the extended column space; the caller scatters their
+    halo blocks home."""
+    from repro.kernels.paramspmm.kernel import paramspmm_kernel
+    from repro.kernels.paramspmm.ops import _pad_chunk_vals, _pad_cols
+    from repro.kernels.sddmm.kernel import sddmm_kernel
+    from repro.kernels.sddmm.ops import _pad_q, normalize_from_stats
+
+    cfg = pcsr.config
+    C, K, V, W = pcsr.num_chunks, pcsr.K, cfg.V, cfg.W
+    nb, R, dblk = pcsr.n_blocks, cfg.R, cfg.dblk
+    Cc = pcsr.covered_num_chunks
+    Ct, Kt, nbt = pcsr_t.num_chunks, pcsr_t.K, pcsr_t.n_blocks
+    Ctc = pcsr_t.covered_num_chunks
+    n_tslots = Ct * V * Kt
+    ext = pcsr.n_cols                      # = pcsr_t.n_rows
+
+    def spmm_heads(col, lr, tr, it, fi, vals4, B3, *, Cc_, Kc, nb_, n_r):
+        """One head-tiled Pallas SpMM over covered steering; ``vals4``
+        are the real chunks (coverage appended here, fill 0)."""
+        d = B3.shape[2]
+        v = _pad_chunk_vals(vals4, Cc_ - vals4.shape[1], 0.0)
+        Bp, _ = _pad_cols(B3.reshape(-1, d), dblk)
+        out = paramspmm_kernel(
+            col[:H * Cc_ * Kc], lr[:H * Cc_ * Kc], tr[:H * Cc_],
+            it[:H * Cc_], fi[:H * Cc_], v.reshape(H * Cc_, V, Kc), Bp,
+            n_blocks=H * nb_, R=R, V=V, K=Kc, dblk=dblk,
+            interpret=interpret)
+        return out[:, :d].reshape(H, nb_ * R, d)[:, :n_r]
+
+    def branch(fcol, flrow, ftrow, finit, ffini, fvals,
+               tcol, tlrow, ttrow, tinit, tfini, tvals,
+               fidx, tidx, do2, q2, kx2, vfx2, lgf, rmf, rsf):
+        do, q, kx, vfx = (head_split(x, H) for x in (do2, q2, kx2, vfx2))
+        da, dv = q.shape[2], do.shape[2]
+        uvals = fvals[:H * Cc * V * K].reshape(H, Cc, V, K)[:, :C]
+        # single-head slot→row map: head 0's prefix has zero offsets
+        lr1, tr1 = flrow[:C * K], ftrow[:C]
+        rows1 = _slot_rows(lr1, tr1, V=V, R=R, K=K).reshape(-1)
+        # α recompute from the stats residuals (no α residual saved)
+        logits = lgf[:H * C * V * K].reshape(H, C, V, K)
+        rowmax = rmf[:H * nb * R].reshape(H, nb, R)
+        rowsum = rsf[:H * nb * R].reshape(H, nb, R)
+        alpha = jax.vmap(lambda lg, rm, rs: normalize_from_stats(
+            lg, rm, rs, lr1, tr1, R=R, V=V, K=K))(logits, rowmax, rowsum)
+        # dα — raw SDDMM kernel over the uncovered head-tiled steering
+        Qp = _pad_q(do, nb * R, dblk).reshape(H * nb * R, -1)
+        Kp, _ = _pad_cols(vfx.reshape(-1, dv), dblk)
+        scores = sddmm_kernel(
+            _uncov(fcol, K, H, Cc, C), _uncov(flrow, K, H, Cc, C),
+            _uncov(ftrow, 1, H, Cc, C), Qp, Kp,
+            W=W, V=V, K=K, dblk=dblk, interpret=interpret)
+        dalpha = jnp.where(uvals.reshape(H * C, V, K) != 0, scores,
+                           0.0).reshape(H, C, V, K)
+
+        def rsum(x):
+            s = jax.ops.segment_sum(x.reshape(-1), rows1,
+                                    num_segments=nb * R)
+            return s[rows1].reshape(x.shape)
+
+        dx = alpha * (dalpha - jax.vmap(rsum)(alpha * dalpha))
+        # LeakyReLU' from the logits (sign-preserving); masked slots have
+        # logit −inf but dx = 0, so the slope branch they take is inert
+        de = dx * float(1.0 / np.sqrt(da)) * jnp.where(logits >= 0,
+                                                       1.0, slope)
+        dQ = spmm_heads(fcol, flrow, ftrow, finit, ffini, de, kx,
+                        Cc_=Cc, Kc=K, nb_=nb, n_r=n_out)
+
+        def to_t(x):
+            """Re-lay (H, C, V, K) slots onto the Aᵀ PCSR's slot tensor
+            through the packed transfer maps (padded entries drop)."""
+            buf = jnp.zeros((H, n_tslots), x.dtype)
+            buf = buf.at[:, tidx].set(x.reshape(H, -1)[:, fidx],
+                                      mode="drop")
+            return buf.reshape(H, Ct, V, Kt)
+
+        dK = spmm_heads(tcol, tlrow, ttrow, tinit, tfini, to_t(de), q,
+                        Cc_=Ctc, Kc=Kt, nb_=nbt, n_r=ext)
+        dVf = spmm_heads(tcol, tlrow, ttrow, tinit, tfini, to_t(alpha),
+                         do, Cc_=Ctc, Kc=Kt, nb_=nbt, n_r=ext)
+        return head_merge(dQ), head_merge(dK), head_merge(dVf)
+    return branch
+
+
+# ------------------------------------------------------------- builder
+def build_dist_gat(g, *, slope: float, H: int):
+    """Build the distributed (multi-head) GAT message closure for one
+    DistGraph: ``f(Q, K, Vf) -> (H, n, d)`` over ``(H, n, d)`` stacks in
+    the merged mesh layout handled by ``DistGraph.gat_message``.
+
+    Engine backend → one natively-differentiable SPMD program.  Pallas
+    backend → ``custom_vjp``: two kernels per shard forward, all-Pallas
+    flash-recompute backward with halo gradient scatter-back."""
+    rows_pad = g.part.rows_pad
+    mesh = g.mesh
+
+    def exchange(k2, vf2, sidx, hsrc):
+        """Joint K/Vf halo exchange: one all_gather serves both operands
+        of the shard's SDDMM + SpMM, every head included."""
+        dk = k2.shape[1]
+        halo = halo_exchange(jnp.concatenate([k2, vf2], axis=1),
+                             sidx, hsrc, axis_name=AXIS)
+        return (jnp.concatenate([k2, halo[:, :dk]], axis=0),
+                jnp.concatenate([vf2, halo[:, dk:]], axis=0))
+
+    if g.backend != "pallas":
+        branches = [_engine_fwd_branch(p, H=H, n_out=rows_pad, slope=slope)
+                    for p in g._fwd.pcsrs]
+
+        def body(q2, k2, vf2, colidx, lrow, trow, init, fini, vals,
+                 sidx, hsrc):
+            kx, vfx = exchange(k2, vf2, sidx[0], hsrc[0])
+            i = jax.lax.axis_index(AXIS)
+            return jax.lax.switch(i, branches, colidx[0], lrow[0], trow[0],
+                                  init[0], fini[0], vals[0], q2, kx, vfx)
+
+        sm = shard_map_2d(body, mesh, 11)
+
+        def f(Q, K, Vf):
+            out = sm(g.pad_heads(Q), g.pad_heads(K), g.pad_heads(Vf),
+                     *g._fwd.arrays, g._send_idx, g._halo_src)
+            return g.unpad_heads(out, H)
+
+        return jax.jit(f)
+
+    # ------------------------- pallas: custom_vjp over the SPMD programs
+    pack = g.gat_pack(H)
+    fwd_branches = [
+        _pallas_fwd_branch(p, H=H, n_out=rows_pad, slope=slope,
+                           interpret=g.interpret,
+                           logits_pad=pack.logits_pad,
+                           stats_pad=pack.stats_pad)
+        for p in pack.fwd.pcsrs]
+
+    def fwd_body(q2, k2, vf2, colidx, lrow, trow, init, fini, vals,
+                 sidx, hsrc):
+        kx, vfx = exchange(k2, vf2, sidx[0], hsrc[0])
+        i = jax.lax.axis_index(AXIS)
+        return jax.lax.switch(i, fwd_branches, colidx[0], lrow[0],
+                              trow[0], init[0], fini[0], vals[0],
+                              q2, kx, vfx)
+
+    fwd_sm = shard_map_2d(fwd_body, mesh, 11, n_out=4)
+
+    @jax.jit
+    def run_fwd(Q, K, Vf):
+        out2, lg, rm, rs = fwd_sm(g.pad_heads(Q), g.pad_heads(K),
+                                  g.pad_heads(Vf), *pack.fwd.arrays,
+                                  g._send_idx, g._halo_src)
+        return g.unpad_heads(out2, H), lg, rm, rs
+
+    state = {}                 # the backward program, built on first use
+
+    def get_bwd():
+        if "fn" in state:
+            return state["fn"]
+        ensure_gat_bwd_pack(pack)
+        branches = [
+            _pallas_bwd_branch(p, pt, H=H, n_out=rows_pad, slope=slope,
+                               interpret=g.interpret)
+            for p, pt in zip(pack.fwd.pcsrs, pack.bwd.pcsrs)]
+        n_parts, max_send = g.halo.n_parts, g.halo.max_send
+
+        def bwd_body(do2, q2, k2, vf2, fc, fl, ft, fi_, ff, fv,
+                     tc, tl, tt, ti, tf_, tv, fidx, tidx, lg, rm, rs,
+                     sidx, hsrc):
+            # flash-style recompute: re-exchange the K/Vf halo instead of
+            # holding the extended operands as residuals
+            kx, vfx = exchange(k2, vf2, sidx[0], hsrc[0])
+            i = jax.lax.axis_index(AXIS)
+            dq2, dkx2, dvfx2 = jax.lax.switch(
+                i, branches, fc[0], fl[0], ft[0], fi_[0], ff[0], fv[0],
+                tc[0], tl[0], tt[0], ti[0], tf_[0], tv[0],
+                fidx[0], tidx[0], do2, q2, kx, vfx, lg[0], rm[0], rs[0])
+            # joint halo gradient scatter-back (dK and dVf in one
+            # collective), the exact transpose of the forward exchange
+            dhalo = jnp.concatenate([dkx2[rows_pad:], dvfx2[rows_pad:]],
+                                    axis=1)
+            back = halo_scatter_back(dhalo, sidx[0], hsrc[0],
+                                     n_parts=n_parts, max_send=max_send,
+                                     rows_pad=rows_pad, axis_name=AXIS)
+            wk = dkx2.shape[1]
+            return (dq2, dkx2[:rows_pad] + back[:, :wk],
+                    dvfx2[:rows_pad] + back[:, wk:])
+
+        sm = shard_map_2d(bwd_body, mesh, 23, n_out=3)
+
+        @jax.jit
+        def run_bwd(Q, K, Vf, lg, rm, rs, dOut):
+            dq2, dk2, dvf2 = sm(g.pad_heads(dOut), g.pad_heads(Q),
+                                g.pad_heads(K), g.pad_heads(Vf),
+                                *pack.fwd.arrays, *pack.bwd.arrays,
+                                pack.f_idx, pack.t_idx, lg, rm, rs,
+                                g._send_idx, g._halo_src)
+            return tuple(g.unpad_heads(x, H) for x in (dq2, dk2, dvf2))
+
+        state["fn"] = run_bwd
+        return run_bwd
+
+    @jax.custom_vjp
+    def f(Q, K, Vf):
+        return run_fwd(Q, K, Vf)[0]
+
+    def f_fwd(Q, K, Vf):
+        out, lg, rm, rs = run_fwd(Q, K, Vf)
+        return out, (Q, K, Vf, lg, rm, rs)
+
+    def f_bwd(res, dOut):
+        Q, K, Vf, lg, rm, rs = res
+        return get_bwd()(Q, K, Vf, lg, rm, rs, dOut)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f

@@ -20,8 +20,13 @@ owners — is the exact transpose: scatter-add into the flat buffer, a
 
 Both directions are plain JAX inside ``shard_map`` bodies, so autodiff
 of a forward exchange materializes the reverse exchange automatically;
-``halo_scatter_back`` exists for explicit ``custom_vjp`` backwards (the
-distributed SpMM's transpose path).
+``halo_scatter_back`` exists for explicit ``custom_vjp`` backwards — the
+distributed SpMM's transpose path and the distributed GAT backward,
+which scatters the dK/dVf halo blocks home in ONE joint collective (the
+gradients travel concatenated along the feature axis, exactly like the
+joint K/Vf forward exchange).  Under ``DistGraph(overlap=True)`` the
+same two primitives are issued *before* the independent local compute so
+the scheduler hides their wire time (docs/DISTRIBUTED.md §Overlap).
 """
 from __future__ import annotations
 

@@ -146,3 +146,38 @@ def unpartition_rows(part: RowPartition, stacked: np.ndarray) -> np.ndarray:
     """Inverse of the padded layout: (P·rows_pad, ...) → (n_global, ...)."""
     idx = part.pad_position(np.arange(part.n_global, dtype=np.int64))
     return np.asarray(stacked)[idx]
+
+
+def split_local_halo(shard: Shard, part: RowPartition):
+    """Split a shard's local CSR into its **local** and **halo** edge sets
+    — the decomposition the halo/compute-overlap path executes.
+
+    The shard CSR spans the extended column space ``[0, rows_pad +
+    halo_pad)``.  Edges whose source column is *owned* (``col <
+    rows_pad``) need no communication; edges whose source is a halo
+    column can only run after the ``all_gather`` lands.  Splitting them
+    into two matrices
+
+    * ``local`` — ``(rows_pad, rows_pad)``, owned columns only;
+    * ``halo``  — ``(rows_pad, halo_pad)``, halo columns renumbered to
+      ``[0, halo_pad)`` so the gathered ``(max_halo, d)`` buffer is its
+      operand directly;
+
+    lets ``A_p·B_ext = local·B_loc + halo·B_halo`` — the local SpMM has
+    no data dependency on the collective, so the XLA scheduler hides the
+    gather latency behind it (see docs/DISTRIBUTED.md §Overlap).  Each
+    sub-matrix gets its own cost-model-selected ⟨W,F,V,S⟩: the halo part
+    of a power-law shard is typically far sparser and more scattered
+    than the local part, so the configs genuinely differ.
+    """
+    csr = shard.csr
+    rows_pad, halo_pad = part.rows_pad, part.halo_pad
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), csr.degrees)
+    local = csr.indices < rows_pad
+    loc = CSRMatrix.from_coo(rows[local], csr.indices[local],
+                             csr.data[local], rows_pad, rows_pad,
+                             sum_duplicates=False)
+    halo = CSRMatrix.from_coo(rows[~local], csr.indices[~local] - rows_pad,
+                              csr.data[~local], rows_pad, halo_pad,
+                              sum_duplicates=False)
+    return loc, halo

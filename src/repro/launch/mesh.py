@@ -38,17 +38,25 @@ def make_host_mesh(model_parallel: int = 1):
         **_axis_type_kwargs(2))
 
 
-def make_partition_mesh(n_parts: int):
-    """1D mesh over the first ``n_parts`` devices — the axis the
+def make_partition_mesh(n_parts: int, devices=None):
+    """1D ``("parts",)`` mesh over ``n_parts`` devices — the axis the
     distributed graph subsystem (``repro.dist``) shards partitions along.
     Kept separate from the data/model training meshes: graph partitions
-    are a *spatial* split of one sparse operator, not batch parallelism."""
-    devs = jax.devices()
+    are a *spatial* split of one sparse operator, not batch parallelism
+    (a ``DistGraph`` can later be nested under an outer data axis by
+    passing a submesh here via ``devices``).  Axes are explicitly Auto
+    where the installed jax distinguishes axis types, matching the
+    training meshes above."""
+    devs = list(jax.devices()) if devices is None else list(devices)
     if n_parts > len(devs):
         raise ValueError(
             f"{n_parts} partitions need {n_parts} devices, have {len(devs)} "
             "(CPU: set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-    return jax.sharding.Mesh(np.asarray(devs[:n_parts]), ("parts",))
+    try:
+        return jax.sharding.Mesh(np.asarray(devs[:n_parts]), ("parts",),
+                                 **_axis_type_kwargs(1))
+    except TypeError:          # older jax: Mesh has no axis_types kwarg
+        return jax.sharding.Mesh(np.asarray(devs[:n_parts]), ("parts",))
 
 
 def data_axes(mesh) -> tuple:

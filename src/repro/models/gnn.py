@@ -12,10 +12,14 @@ built by ``core.engine.make_gat_message_fn`` (two kernels: SDDMM→softmax
 stats, prologue SpMM), mirroring HGL-proto's GSDDMM/GSPMM operator pair.
 
 The distributed operators plug into the same seams with global shapes:
-``repro.dist.DistGraph`` is a `(n, d) -> (n, d)` spmm closure and its
-``.gat_message`` a single-head message closure — the models never see
-the mesh, the partitioning, or the per-shard configs (`apps/gnn.py
---partitions N` wires them in).
+``repro.dist.DistGraph`` is a `(n, d) -> (n, d)` spmm closure (with the
+same ``.fused`` epilogue surface) and its ``.gat_message`` a message
+closure accepting the same single-head `(n, d)` or multi-head
+`(H, n, d)` stacks as the single-device message fn — the models never
+see the mesh, the partitioning, the per-shard configs, or whether the
+halo gather is overlapped with compute (`apps/gnn.py --partitions N
+[--heads H] [--overlap]` wires them in; docs/DISTRIBUTED.md walks
+through scaling a GAT to N shards).
 """
 from __future__ import annotations
 
