@@ -86,12 +86,12 @@ def run(dim: int = 64, parts=(1, 2, 4, 8), heads: int = 1):
             g = DistGraph(csr, dim, n_parts, strategy="balanced",
                           heads=heads)
             for i, (s, c) in enumerate(zip(g.part.shards, g.configs)):
-                w, f, v, sw = c.astuple()
+                w, f, v, sw, bal = c.astuple()
                 emit(f"dist/{name}/p{n_parts}/shard{i}",
                      g.predicted_times[i] * 1e6,
                      f"rows={s.n_local_rows};nnz={s.csr.nnz};"
                      f"halo={s.n_halo};W={w};F={f};V={v};S={int(sw)};"
-                     f"H={heads}")
+                     f"B={int(bal)};H={heads}")
             adaptive = _predicted_makespan(g, g.configs)
             uniform = _predicted_makespan(g, [global_cfg] * n_parts)
             emit(f"dist/{name}/p{n_parts}/adaptive_gain", adaptive * 1e6,

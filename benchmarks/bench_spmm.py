@@ -1,0 +1,99 @@
+"""Balanced-vs-uniform SpMM schedule benchmark over the skewed corpus.
+
+For every graph in ``corpus("skewed")`` — high-CV power-law/co-citation
+stressors plus uniform-degree controls — this reports both sides of the
+B-mode acceptance story:
+
+* **priced** makespan: ``CostModel.best`` over the full config space vs
+  the uniform-only (``B=False``) subspace, so the row records whether the
+  cost model *selects* the balanced schedule and how much it thinks it
+  saves;
+* **measured** makespan: median engine wall-clock with the *schedule
+  isolated* — the selected config measured against the SAME ⟨W, F, V⟩
+  with the B bit toggled, so the comparison never conflates the chunk
+  schedule with a blocking change (the engine's per-slot cost differs
+  across V, which would pollute a best-vs-best measurement).  The engine
+  gathers every slot (padding included), so its time scales with total
+  slots C·K — exactly the quantity the balanced packer minimizes —
+  making it a faithful CPU-host proxy for the TPU kernel's slot-bound
+  makespan.
+
+Structured metrics feed the ``"spmm"`` section of ``BENCH_spmm.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import time_fn
+from repro.core.cost_model import CostModel
+from repro.core.engine import _engine
+from repro.core.pcsr import build_pcsr, config_space
+
+from .common import bench_corpus, emit
+
+DIM = 32
+REPS = 7
+
+
+def _measure(csr, cfg, dim: int, rng) -> tuple[float, int]:
+    """Median engine seconds (and slot count) for one SpMM on ``cfg``'s
+    steering arrays."""
+    p = build_pcsr(csr.indptr, csr.indices, csr.data,
+                   csr.n_rows, csr.n_cols, cfg)
+    t = p.steering()
+    dim_pad = -(-dim // cfg.dblk) * cfg.dblk
+    B = jnp.asarray(rng.standard_normal((csr.n_cols, dim_pad)), jnp.float32)
+    sec = time_fn(
+        lambda: _engine(t["colidx"], t["lrow"], t["trow"], t["vals"], B,
+                        V=cfg.V, R=cfg.R, K=p.K, n_blocks=p.n_blocks,
+                        n_rows=p.n_rows), reps=REPS, warmup=2)
+    return sec, p.num_slots
+
+
+def run():
+    """Balanced-vs-uniform priced + measured makespan per skewed graph."""
+    metrics: dict = {"dim": DIM, "graphs": {}}
+    rng = np.random.default_rng(0)
+    for spec in bench_corpus("skewed"):
+        csr = spec.csr
+        deg = np.diff(csr.indptr)
+        cv = float(deg.std() / max(deg.mean(), 1e-12))
+        cm = CostModel(csr)
+        space = config_space(DIM)
+        best, t_best = cm.best(DIM, space)
+        best_uni, t_uni = cm.best(DIM, [c for c in space if not c.B])
+        # schedule-isolated measurement: best's ⟨W, F, V⟩, B toggled
+        cfg_b = dataclasses.replace(best, S=True, B=True)
+        cfg_u = dataclasses.replace(best, B=False)
+        m_bal, slots_b = _measure(csr, cfg_b, DIM, rng)
+        m_uni, slots_u = _measure(csr, cfg_u, DIM, rng)
+        emit(f"spmm/{spec.name}/balanced" if best.B
+             else f"spmm/{spec.name}/uniform",
+             (m_bal if best.B else m_uni) * 1e6,
+             f"family={spec.family};cv={cv:.2f};"
+             f"priced_us={t_best * 1e6:.1f};"
+             f"priced_uniform_us={t_uni * 1e6:.1f};"
+             f"cfg={best.astuple()};cfg_uniform={best_uni.astuple()};"
+             f"priced_gain={t_uni / max(t_best, 1e-12):.3f};"
+             f"measured_balanced_us={m_bal * 1e6:.1f};"
+             f"measured_uniform_us={m_uni * 1e6:.1f};"
+             f"measured_gain={m_uni / max(m_bal, 1e-12):.3f};"
+             f"slots_balanced={slots_b};slots_uniform={slots_u}")
+        metrics["graphs"][spec.name] = {
+            "family": spec.family,
+            "degree_cv": cv,
+            "nnz": int(csr.nnz),
+            "balanced_selected": bool(best.B),
+            "best_config": best.astuple(),
+            "best_uniform_config": best_uni.astuple(),
+            "priced_best_us": t_best * 1e6,
+            "priced_uniform_us": t_uni * 1e6,
+            "measured_balanced_us": m_bal * 1e6,
+            "measured_uniform_us": m_uni * 1e6,
+            "slots_balanced": int(slots_b),
+            "slots_uniform": int(slots_u),
+        }
+    return metrics

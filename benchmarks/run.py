@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
            compute overlap on/off column
   fusion — kernel/elementwise-pass counts +       [fusion extension]
            fused-vs-unfused pricing
+  spmm   — balanced-vs-uniform chunk schedule     [B-mode extension]
+           priced + measured makespan on the
+           skewed corpus
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_spmm.json`` (default path): every emitted CSV row plus the
@@ -42,7 +45,8 @@ def main(argv=None):
     from benchmarks import (bench_balancing, bench_blocking,
                             bench_coarsening, bench_decider, bench_dist,
                             bench_fusion, bench_gnn_train, bench_kernel,
-                            bench_reorder, bench_sddmm, bench_speedups)
+                            bench_reorder, bench_sddmm, bench_speedups,
+                            bench_spmm)
     from benchmarks.common import ROWS, emit
 
     print("name,us_per_call,derived")
@@ -58,6 +62,7 @@ def main(argv=None):
         "sddmm": bench_sddmm.run,
         "dist": bench_dist.run,
         "fusion": bench_fusion.run,      # returns structured metrics
+        "spmm": bench_spmm.run,          # returns structured metrics
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None
@@ -70,7 +75,7 @@ def main(argv=None):
             decider = fn()
         elif key == "table4":
             bench_speedups.run(decider)
-        elif key in ("fusion", "dist"):    # structured metrics → JSON
+        elif key in ("fusion", "dist", "spmm"):   # structured → JSON
             extras[key] = fn()
         else:
             fn()

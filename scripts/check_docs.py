@@ -14,7 +14,10 @@ Two kinds of references are verified:
 Plus the reverse direction (``COVERAGE``): a guide mapped to a package
 must mention every name in that package's ``__all__`` — so a new public
 symbol in ``repro.dist`` fails CI until DISTRIBUTED.md documents it,
-the same bar OPERATORS.md sets for the operator surface.
+the same bar OPERATORS.md sets for the operator surface.  A guide may
+instead map to an explicit list of dotted symbols (for surfaces spread
+across modules without a single ``__all__``); each symbol must both
+resolve AND be mentioned by its final name.
 """
 from __future__ import annotations
 
@@ -31,8 +34,21 @@ FROM_IMPORT = re.compile(r"^\s*from\s+(repro[\w.]*)\s+import\s+(.+)$", re.M)
 PLAIN_IMPORT = re.compile(r"^\s*import\s+(repro[\w.]*)", re.M)
 DOTTED = re.compile(r"`(repro(?:\.\w+)+)")
 
-# guide → package whose entire ``__all__`` the guide must mention
-COVERAGE = {"DISTRIBUTED.md": "repro.dist"}
+# guide → package whose entire ``__all__`` the guide must mention, OR an
+# explicit list of dotted symbols the guide must mention by final name
+COVERAGE = {
+    "DISTRIBUTED.md": "repro.dist",
+    # the balanced-scheduling + tile-aligned-stats surface (PR 6)
+    "OPERATORS.md": [
+        "repro.core.balanced_capacity",
+        "repro.core.pcsr.balanced_capacity",
+        "repro.kernels.sddmm.ops.unpack_stats",
+        "repro.kernels.sddmm.ops.pack_stats",
+        "repro.kernels.sddmm.ops.normalize_from_stats",
+        "repro.core.autotune.oracle_search",
+        "repro.data.graphs.corpus",
+    ],
+}
 
 
 def resolve(dotted: str) -> bool:
@@ -67,13 +83,22 @@ def refs_in(text: str):
 
 
 def coverage_gaps(fname: str, text: str):
-    """Public names of the mapped package the guide fails to mention."""
-    pkg = COVERAGE.get(fname)
-    if pkg is None:
+    """Mapped symbols the guide fails to mention (or that don't exist)."""
+    spec = COVERAGE.get(fname)
+    if spec is None:
         return []
-    mod = importlib.import_module(pkg)
-    return [f"{pkg}.{name}" for name in getattr(mod, "__all__", [])
-            if not re.search(rf"\b{re.escape(name)}\b", text)]
+    if isinstance(spec, str):                      # package __all__ form
+        mod = importlib.import_module(spec)
+        return [f"{spec}.{name}" for name in getattr(mod, "__all__", [])
+                if not re.search(rf"\b{re.escape(name)}\b", text)]
+    gaps = []                                      # explicit symbol list
+    for dotted in spec:
+        name = dotted.rsplit(".", 1)[-1]
+        if not resolve(dotted):
+            gaps.append(f"{dotted} (does not resolve)")
+        elif not re.search(rf"\b{re.escape(name)}\b", text):
+            gaps.append(dotted)
+    return gaps
 
 
 def main() -> int:

@@ -20,8 +20,9 @@ python -m compileall -q src
 python scripts/check_imports.py   # every bench_*/example module imports
 python scripts/check_docs.py      # README/docs symbol references resolve
 # perf-trajectory artifact: measured kernel/elementwise-pass counts for
-# the fused GNN hot path + fused-vs-unfused pricing, plus the
-# distributed per-shard config table and overlap on/off column — all in
-# one machine-readable BENCH_spmm.json
-python -m benchmarks.run --only fusion,dist --json BENCH_spmm.json
+# the fused GNN hot path + fused-vs-unfused pricing, the distributed
+# per-shard config table and overlap on/off column, and the skewed-corpus
+# balanced-vs-uniform schedule smoke (priced + measured makespan) — all
+# in one machine-readable BENCH_spmm.json
+python -m benchmarks.run --only fusion,dist,spmm --json BENCH_spmm.json
 echo "ci: OK"

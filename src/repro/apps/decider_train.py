@@ -40,7 +40,11 @@ class DeciderDataset:
 
 
 def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
-                  op: str = "spmm", verbose=False) -> DeciderDataset:
+                  op: str = "spmm", H: int = 1,
+                  verbose=False) -> DeciderDataset:
+    """``H`` is the head count the oracle labels are collected for —
+    multi-head GAT deciders must be trained on ``H``-aware labels (the
+    optimal F/V/S shifts with the per-head dim), not the H=1 ones."""
     graphs = graphs if graphs is not None else corpus("bench")
     samples, times, by_graph = [], {}, {}
     for g in graphs:
@@ -48,7 +52,7 @@ def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
         feats = extract_features(g.csr)
         cm = CostModel(g.csr) if mode == "model" else None
         for dim in dims:
-            res = oracle_search(g.csr, dim, mode=mode, cm=cm, op=op)
+            res = oracle_search(g.csr, dim, mode=mode, cm=cm, op=op, H=H)
             samples.append((feats, dim, res.best_config))
             times[(g.name, dim)] = res.times
             by_graph.setdefault(g.name, []).append(len(samples) - 1)
@@ -112,8 +116,12 @@ def main(argv=None):
     ap.add_argument("--mode", default="model",
                     choices=["model", "measured"],
                     help="label source: cost-model pricing or host timing")
+    ap.add_argument("--heads", type=int, default=1,
+                    help="head count the oracle labels are collected for "
+                    "(multi-head GAT deciders need H-aware labels)")
     ap.add_argument("--scale", default="small",
-                    choices=["small", "bench"], help="graph corpus")
+                    choices=["small", "bench", "skewed"],
+                    help="graph corpus")
     ap.add_argument("--dims", default=None,
                     help="comma-separated embedding dims (default: paper "
                     "sweep 16..256)")
@@ -125,9 +133,10 @@ def main(argv=None):
     dims = (tuple(int(d) for d in args.dims.split(","))
             if args.dims else DIMS)
     ds = build_dataset(corpus(args.scale), dims=dims, mode=args.mode,
-                       op=args.op, verbose=True)
+                       op=args.op, H=args.heads, verbose=True)
     ev = train_eval(ds, seed=args.seed)
-    print(f"op={args.op} mode={args.mode} graphs={len(ds.graph_names)}")
+    print(f"op={args.op} mode={args.mode} H={args.heads} "
+          f"graphs={len(ds.graph_names)}")
     for d, (pred, rnd) in ev.per_dim.items():
         print(f"  dim={d:4d}  pred_norm={pred:.3f}  random_norm={rnd:.3f}")
     print(f"overall: pred={ev.overall_pred:.3f} random={ev.overall_rnd:.3f}")

@@ -197,8 +197,8 @@ def main(argv=None):
     cfgs = res.config if isinstance(res.config, list) else [res.config]
     for i, c in enumerate(cfgs):
         if c is not None:
-            w, f, v, s = c.astuple()
-            print(f"partition {i}: W={w} F={f} V={v} S={s}")
+            w, f, v, s, b = c.astuple()
+            print(f"partition {i}: W={w} F={f} V={v} S={s} B={b}")
 
 
 if __name__ == "__main__":

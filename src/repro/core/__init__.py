@@ -10,16 +10,16 @@ modules are pulled in eagerly — the JAX-importing layers (``engine``,
 from .cost_model import (CostBreakdown, CostModel, kernel_cost, sddmm_cost,
                          unfused_penalty)
 from .features import FEATURE_NAMES, MatrixFeatures, extract_features
-from .pcsr import (PCSR, PCSRStats, SpMMConfig, build_pcsr, config_space,
-                   pcsr_stats, pcsr_to_coo, slot_transfer_map,
-                   transpose_csr, transpose_pcsr)
+from .pcsr import (PCSR, PCSRStats, SpMMConfig, balanced_capacity,
+                   build_pcsr, config_space, pcsr_stats, pcsr_to_coo,
+                   slot_transfer_map, transpose_csr, transpose_pcsr)
 from .sparse import CSRMatrix
 
 __all__ = [
     "CSRMatrix",
-    "PCSR", "PCSRStats", "SpMMConfig", "build_pcsr", "config_space",
-    "pcsr_stats", "pcsr_to_coo", "slot_transfer_map", "transpose_csr",
-    "transpose_pcsr",
+    "PCSR", "PCSRStats", "SpMMConfig", "balanced_capacity", "build_pcsr",
+    "config_space", "pcsr_stats", "pcsr_to_coo", "slot_transfer_map",
+    "transpose_csr", "transpose_pcsr",
     "CostBreakdown", "CostModel", "kernel_cost", "sddmm_cost",
     "unfused_penalty",
     "FEATURE_NAMES", "MatrixFeatures", "extract_features",

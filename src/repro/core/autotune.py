@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cost_model import CostModel
-from .engine import engine_spmm
 from .pcsr import SpMMConfig, build_pcsr, config_space
 from .sparse import CSRMatrix
 
@@ -44,35 +43,59 @@ class OracleResult:
 def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
                   reps: int = 3, rng_seed: int = 0,
                   cm: CostModel | None = None,
-                  op: str = "spmm") -> OracleResult:
+                  op: str = "spmm", H: int = 1) -> OracleResult:
     """Exhaustive search of ``space`` for operator ``op`` ("spmm",
     "sddmm", or "gat" — the SDDMM+softmax+SpMM attention pair, timed or
-    priced as the sum of its two passes)."""
+    priced as the sum of its two passes).
+
+    ``H`` is the head count the labels are collected FOR: multi-head
+    layers run the head-tiled grid over the *per-head* dim ``ceil(dim/H)``
+    (see ``kernel_cost``), so the optimal config genuinely shifts with H
+    — a search pinned at H=1 labels multi-head GAT deciders for the wrong
+    problem.  Model mode prices ``cm.time(..., H=H)``; measured mode
+    times the engine on the actual head-tiled steering arrays
+    (``PCSR.steering(H)``) with per-head-dim operands.
+    """
     if op not in ("spmm", "sddmm", "gat"):
         raise ValueError(op)
+    if H < 1:
+        raise ValueError(f"H must be ≥ 1, got {H}")
     space = space or config_space(dim)
     times = {}
     if mode == "model":
         cm = cm or CostModel(csr)
         for cfg in space:
-            times[cfg] = cm.time(dim, cfg, op)
+            times[cfg] = cm.time(dim, cfg, op, H=H)
     elif mode == "measured":
-        from .engine import engine_sddmm
+        from .engine import _engine, _engine_sddmm
 
         rng = np.random.default_rng(rng_seed)
+        d_head = -(-dim // H)
         for cfg in space:
-            dim_pad = -(-dim // cfg.dblk) * cfg.dblk
-            B = jnp.asarray(rng.standard_normal((csr.n_cols, dim_pad)),
-                            jnp.float32)
+            dim_pad = -(-d_head // cfg.dblk) * cfg.dblk
+            B = jnp.asarray(
+                rng.standard_normal((H * csr.n_cols, dim_pad)), jnp.float32)
             pcsr = build_pcsr(csr.indptr, csr.indices, csr.data,
                               csr.n_rows, csr.n_cols, cfg)
+            st = pcsr.steering(H)
+            colidx, lrow, trow, vals = (
+                jnp.asarray(st[k]) for k in ("colidx", "lrow", "trow", "vals"))
             t = 0.0
             if op in ("spmm", "gat"):
-                t += time_fn(engine_spmm, pcsr, B, reps=reps)
+                t += time_fn(
+                    lambda: _engine(colidx, lrow, trow, vals, B, V=cfg.V,
+                                    R=cfg.R, K=pcsr.K,
+                                    n_blocks=H * pcsr.n_blocks,
+                                    n_rows=H * pcsr.n_blocks * cfg.R),
+                    reps=reps)
             if op in ("sddmm", "gat"):
-                Q = jnp.asarray(rng.standard_normal((csr.n_rows, dim_pad)),
-                                jnp.float32)
-                t += time_fn(engine_sddmm, pcsr, Q, B, reps=reps)
+                Q = jnp.asarray(
+                    rng.standard_normal((H * pcsr.n_blocks * cfg.R, dim_pad)),
+                    jnp.float32)
+                t += time_fn(
+                    lambda: _engine_sddmm(colidx, lrow, trow, vals, Q, B,
+                                          V=cfg.V, R=cfg.R, K=pcsr.K),
+                    reps=reps)
             times[cfg] = t
     else:
         raise ValueError(mode)

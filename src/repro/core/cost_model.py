@@ -8,6 +8,9 @@ approximated:
 
   * V padding (PR_V)      → more slots when vectors are half-empty;
   * S chunk padding       → slots = Σ_b ceil(cnt_b/K)·K;
+  * B balanced schedule   → distribution-derived K cuts padding slots on
+                            skewed graphs, priced against the extra
+                            per-chunk ``CHUNK_SETUP`` the finer split pays;
   * F MAC-job gap         → J·Dblk ≥ dim lane waste;
   * W scatter granularity → output-block traffic ∝ blocks touched.
 
@@ -28,6 +31,13 @@ from .sparse import CSRMatrix
 HBM_BW = 819e9            # B/s
 VPU_FLOPS = 1.9e12        # f32 FMA/s (VPU, not MXU)
 STEP_OVERHEAD = 100e-9    # s per grid step not hidden by double buffering
+# Per-chunk setup not hidden by double buffering: the scalar-prefetched
+# steering fetch + the chunk's vals-block DMA issue.  This is the term
+# that stops the balanced schedule (B=True) from splitting ever finer —
+# fewer padding slots trade against more chunks, the same λ trade
+# ``balanced_capacity`` optimizes (BALANCE_LAMBDA ≈ CHUNK_SETUP in units
+# of per-slot step overhead).
+CHUNK_SETUP = 400e-9
 DTYPE_BYTES = 4
 
 
@@ -72,7 +82,7 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     VMEM-resident block for free).
     """
     assert stats.V == config.V and stats.W == config.W
-    C, K, slots = stats.chunks_and_slots(config.S)
+    C, K, slots = stats.chunks_and_slots(config.S, B=config.B)
     dblk = config.dblk
     d_head = _head_dim(dim, heads)
     J = -(-d_head // dblk)
@@ -94,7 +104,10 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     return CostBreakdown(
         t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
         t_compute=flops / VPU_FLOPS,
-        t_overhead=steps * STEP_OVERHEAD,
+        # chunks are revisited once per dim tile in the (J, C, K) grid, so
+        # the per-chunk setup is paid J·C times — the makespan term that
+        # prices the balanced schedule's slots-vs-chunks trade
+        t_overhead=steps * STEP_OVERHEAD + J * C * CHUNK_SETUP,
         bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
         flops=flops, steps=steps)
 
@@ -115,7 +128,7 @@ def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     ``kernel_cost``.
     """
     assert stats.V == config.V and stats.W == config.W
-    C, K, slots = stats.chunks_and_slots(config.S)
+    C, K, slots = stats.chunks_and_slots(config.S, B=config.B)
     dblk = config.dblk
     d_head = _head_dim(dim, heads)
     J = -(-d_head // dblk)
@@ -134,7 +147,8 @@ def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     return CostBreakdown(
         t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
         t_compute=flops / VPU_FLOPS,
-        t_overhead=steps * STEP_OVERHEAD,
+        # the (C, K, J) grid fetches each chunk's steering/vals once
+        t_overhead=steps * STEP_OVERHEAD + C * CHUNK_SETUP,
         bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
         flops=flops, steps=steps)
 
@@ -155,7 +169,7 @@ def unfused_penalty(stats: PCSRStats, dim: int, config: SpMMConfig,
       (n, d) output — one read + one write of the full output (XLA fuses
       the elementwise chain into a single pass, so that is what we price).
     """
-    C, K, slots = stats.chunks_and_slots(config.S)
+    C, K, slots = stats.chunks_and_slots(config.S, B=config.B)
     if op == "gat":
         slot_bytes = heads * C * config.V * K * dtype_bytes
         return 3.0 * slot_bytes / HBM_BW

@@ -138,9 +138,10 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
       interstitial elementwise pass and α is never materialized in HBM.
 
       The backward is flash-style recompute: residuals are only the raw
-      logits + the two (n_blocks, R) row-stat vectors — the (C, V, K) α
-      residual is dropped and α is recomputed from the stats where the
-      vjp needs it.  The pipeline is dedicated all-Pallas — no engine
+      logits + the two tile-aligned row-stat arrays
+      ((n_blocks·SUBLANES, LANES), the kernel's native layout) — the
+      (C, V, K) α residual is dropped and α is recomputed from the stats
+      where the vjp needs it.  The pipeline is dedicated all-Pallas — no engine
       fallback:
 
         α   = exp(logits − rowmax)/rowsum       (recompute, no residual)
@@ -185,7 +186,7 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
     from repro.kernels.paramspmm.ops import paramspmm_with_vals
     from repro.kernels.sddmm.ops import (normalize_from_stats,
                                          sddmm as _sddmm_call,
-                                         sddmm_softmax_stats)
+                                         sddmm_softmax_stats, unpack_stats)
 
     from .pcsr import slot_transfer_map, transpose_pcsr
     if pcsr_t is None:
@@ -215,11 +216,13 @@ def make_gat_message_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
                                     arrs["trow"], R=R, V=V, K=K)
 
     def _alpha(logits, rowmax, rowsum):
+        rm = unpack_stats(rowmax, R)       # tile-aligned → dense (·, R)
+        rs = unpack_stats(rowsum, R)
         if logits.ndim == 4:                            # (H, C, V, K)
             H = logits.shape[0]
-            return jax.vmap(_alpha_1h)(logits, rowmax.reshape(H, -1, R),
-                                       rowsum.reshape(H, -1, R))
-        return _alpha_1h(logits, rowmax, rowsum)
+            return jax.vmap(_alpha_1h)(logits, rm.reshape(H, -1, R),
+                                       rs.reshape(H, -1, R))
+        return _alpha_1h(logits, rm, rs)
 
     def fwd_path(Q, K_mat, Vf):
         logits, rowmax, rowsum = sddmm_softmax_stats(

@@ -1,10 +1,15 @@
 """Sparse-matrix features for the SpMM-decider (paper Table 3).
 
 Three categories: size (n, n̂, nnz, r, d, d̂, d_max), degree distribution
-(CV, ĈV, SR_i), data locality (ρ, bw_avg, bw_max, PR_i).  Features are a
-function of the sparse matrix only — measured once, reused across ``dim``
-(the paper's amortization argument).  ``dim`` itself is appended at
-prediction time so one model serves all dims.
+(CV, ĈV, SR_i, bal_i), data locality (ρ, bw_avg, bw_max, PR_i).  Features
+are a function of the sparse matrix only — measured once, reused across
+``dim`` (the paper's amortization argument).  ``dim`` itself is appended
+at prediction time so one model serves all dims.
+
+``bal_1``/``bal_2`` are the balanced-schedule slot savings — the fraction
+of grid slots the ``B=True`` layout removes relative to the mean-SG
+split layout at V=1/V=2 — the direct predictor of when the decider
+should pick a balanced config (high CV ⇒ high bal_i).
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ FEATURE_NAMES = [
     "n", "n_hat", "nnz", "r", "d", "d_hat", "d_max",          # size
     "cv", "cv_hat", "sr_1", "sr_2",                           # degree dist
     "rho", "bw_avg", "bw_max", "pr_1", "pr_2",                # locality
+    "bal_1", "bal_2",                     # balanced-schedule slot savings
 ]
 
 
@@ -48,6 +54,18 @@ def _split_ratio(csr: CSRMatrix, V: int) -> float:
     return C / max(1, st.n_nonempty_blocks)
 
 
+def _balanced_gain(csr: CSRMatrix, V: int) -> float:
+    """Slot savings of the ⟨V, S=True, B=True⟩ layout over ⟨V, S=True⟩ at
+    the reference W = 8/V: ``1 − slots_B/slots_S``.  ≈ 0 on uniform-degree
+    graphs (the capacity search lands on the mean-SG layout), grows with
+    degree CV — the feature the decider splits on to pick ``B``."""
+    st = pcsr_stats(csr.indptr, csr.indices, csr.n_rows, csr.n_cols,
+                    V, max(1, 8 // V))
+    _, _, slots_s = st.chunks_and_slots(S=True)
+    _, _, slots_b = st.chunks_and_slots(S=True, B=True)
+    return 1.0 - slots_b / max(1, slots_s)
+
+
 def extract_features(csr: CSRMatrix) -> MatrixFeatures:
     n = csr.n_rows
     deg = csr.degrees.astype(np.float64)
@@ -72,5 +90,7 @@ def extract_features(csr: CSRMatrix) -> MatrixFeatures:
     pr_2 = st2.padding_ratio
     vals = np.array([n, n_hat, nnz, n_hat / max(1, n), d, d_hat, d_max,
                      cv, cv_hat, _split_ratio(csr, 1), _split_ratio(csr, 2),
-                     rho, bw_avg, bw_max, 0.0, pr_2], np.float64)
+                     rho, bw_avg, bw_max, 0.0, pr_2,
+                     _balanced_gain(csr, 1), _balanced_gain(csr, 2)],
+                    np.float64)
     return MatrixFeatures(vals)

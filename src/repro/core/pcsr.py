@@ -15,7 +15,17 @@ sequential Pallas grid (see DESIGN.md §2):
   (the paper's Split Granularity, Eq. 3, with warp-size roundup replaced
   by sublane roundup), so heavy blocks split across several chunks that
   the kernel accumulates via consecutive output-block revisits (the
-  TPU analogue of the paper's ``TRow`` + ``atomicAdd``).
+  TPU analogue of the paper's ``TRow`` + ``atomicAdd``);
+* ``B=True`` (requires ``S=True``) → the *nnz-balanced* schedule: the
+  capacity comes from ``balanced_capacity`` (a search over the block
+  population *distribution*, not just its mean), each block's vectors
+  are round-robined across its chunks so per-chunk nnz is near-uniform
+  (no mostly-empty tail chunk), and chunks are emitted in LPT order
+  (descending block population, each block's chunks contiguous — the
+  ``fini``/VMEM-revisit machinery only needs *grouped* ``trow``, not
+  ascending).  On a power-law graph this removes most of the padding
+  slots the mean-derived ``SG`` wastes on the long tail of light
+  blocks — the total-slot count is the sequential grid's makespan.
 
 Everything here is host-side preprocessing in vectorized numpy — the
 paper performs PCSR generation on the host as well, amortized across
@@ -43,22 +53,29 @@ def _round_up(x: int, m: int) -> int:
 
 @dataclass(frozen=True)
 class SpMMConfig:
-    """The paper's ⟨W, F, V, S⟩ tuple.
+    """The paper's ⟨W, F, V, S⟩ tuple, plus the TPU ``B`` (balanced) axis.
 
     V: vector size of blocking (paper domain {1, 2}).
     S: workload balancing on/off.
     F: coarsening factor — dim-tile width ``Dblk = F·128`` lanes.
     W: panels per output block — block height ``R = V·W`` rows.
+    B: nnz-balanced chunk schedule (distribution-derived capacity +
+       round-robin slot packing + LPT chunk order).  Requires ``S=True``
+       — balancing is a refinement of the split-chunk layout; the kernel
+       is unchanged, only the steering arrays differ.
     """
 
     V: int = 1
     S: bool = False
     F: int = 1
     W: int = 8
+    B: bool = False
 
     def __post_init__(self):
         if self.V < 1 or self.F < 1 or self.W < 1:
             raise ValueError(f"invalid config {self}")
+        if self.B and not self.S:
+            raise ValueError(f"B=True requires S=True ({self})")
 
     @property
     def R(self) -> int:
@@ -69,7 +86,7 @@ class SpMMConfig:
         return self.F * LANES
 
     def astuple(self):
-        return (self.W, self.F, self.V, self.S)
+        return (self.W, self.F, self.V, self.S, self.B)
 
     def replace(self, **kw) -> "SpMMConfig":
         return dataclasses.replace(self, **kw)
@@ -81,6 +98,12 @@ def config_space(dim: int, max_f: int = 4):
     V ∈ {1,2} (paper limits V to {1,2}: V=3 pads >50% on 97.5% of graphs);
     S ∈ {False,True}; F ∈ [1, CEIL(dim/128)] (the paper's
     F ∈ [1, CEIL(dim/ω)] with ω=128 on TPU); R = V·W ∈ {8,16,32}.
+
+    Balanced (``B=True``, implies ``S=True``) variants are appended AFTER
+    the uniform configs so an exact price tie — the degenerate case on
+    uniform-degree graphs, where ``balanced_capacity`` lands on the same
+    ``K`` as the mean-derived SG — resolves to the uniform layout under
+    ``CostModel.best``'s strict ``<``.
     """
     fs = list(range(1, min(max_f, _round_up(dim, LANES) // LANES) + 1))
     out = []
@@ -89,6 +112,10 @@ def config_space(dim: int, max_f: int = 4):
             for f in fs:
                 for r in (8, 16, 32):
                     out.append(SpMMConfig(V=v, S=s, F=f, W=r // v))
+    for v in (1, 2):
+        for f in fs:
+            for r in (8, 16, 32):
+                out.append(SpMMConfig(V=v, S=True, F=f, W=r // v, B=True))
     return out
 
 
@@ -158,8 +185,10 @@ class PCSR:
         last ``(j, k)`` step of a block is the one moment the completed
         ``(R, Dblk)`` output tile is still VMEM-resident, so scale/bias/
         activation can be applied for free before write-back.  ``trow`` is
-        sorted by construction, so the last chunk of each block is the one
-        whose successor targets a different block.
+        *grouped* by construction — each block's chunks are contiguous
+        (ascending in the uniform modes, LPT order under ``B=True``) — so
+        the last chunk of each block is the one whose successor targets a
+        different block.
         """
         f = self.__dict__.get("_fini")
         if f is None:
@@ -264,10 +293,61 @@ def split_granularity(nnz_vec: int, n_nonempty_blocks: int) -> int:
     return max(SUBLANES, _round_up(mean, SUBLANES))
 
 
+# Chunks a balanced schedule is willing to add per removed slot-octet: the
+# capacity search charges each extra chunk as ``BALANCE_LAMBDA`` padding
+# slots, mirroring the cost model's per-chunk ``CHUNK_SETUP`` overhead
+# (steering fetch + vals DMA issue) so the packer and the pricing agree on
+# when splitting finer stops paying.
+BALANCE_LAMBDA = 4.0
+
+
+def balanced_capacity(counts, lam: float = BALANCE_LAMBDA,
+                      unbalanced_cap: int = UNBALANCED_CAP) -> int:
+    """Chunk capacity minimizing ``slots(K) + lam · chunks(K)`` over the
+    block-population *distribution* (the mean-derived SG of Eq. 3 only
+    sees its first moment).
+
+    ``slots(K) = Σ_b ceil(cnt_b/K)·K`` is the sequential grid's makespan
+    (every slot is one grid step, padding included); ``chunks(K)`` prices
+    per-chunk setup.  Candidates are the sublane roundups of the
+    population quantiles + mean — O(1) evaluations of an O(n_blocks)
+    objective, deterministic, and within a sublane of the true optimum on
+    every corpus family (the objective is piecewise-linear between
+    population order statistics).
+    """
+    counts = np.asarray(counts, np.int64)
+    counts = counts[counts > 0]
+    if counts.size == 0:
+        return SUBLANES
+    qs = np.quantile(counts, [0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0])
+    cand = {max(SUBLANES, min(_round_up(int(q), SUBLANES),
+                              _round_up(unbalanced_cap, SUBLANES)))
+            for q in np.concatenate([qs, [counts.mean()]])}
+    best_k, best_obj = SUBLANES, np.inf
+    for K in sorted(cand):
+        nch = -(-counts // K)
+        C = int(nch.sum())
+        obj = C * K + lam * C
+        if obj < best_obj:
+            best_k, best_obj = K, obj
+    return best_k
+
+
 def build_pcsr(indptr, indices, data, n_rows, n_cols,
                config: SpMMConfig, unbalanced_cap: int = UNBALANCED_CAP) -> PCSR:
-    """PCSR generation (paper §4.2), fully vectorized."""
-    V, W, S = config.V, config.W, config.S
+    """PCSR generation (paper §4.2), fully vectorized.
+
+    ``config.B`` selects the nnz-balanced packer: capacity from
+    ``balanced_capacity``, each block's vectors round-robined across its
+    chunks (per-chunk nnz within a block differs by ≤ 1 — a fat row's
+    vectors split evenly over every chunk instead of filling chunks
+    left-to-right and leaving a mostly-padding tail), chunks emitted in
+    LPT (descending block population) order with each block's chunks
+    contiguous.  Downstream machinery only relies on *grouped* ``trow``
+    (``fini``/consecutive-revisit accumulation), never on ascending
+    order, so the schedule needs no kernel change.
+    """
+    V, W, S, Bal = config.V, config.W, config.S, config.B
     indptr = np.asarray(indptr, np.int64)
     indices = np.asarray(indices, np.int64)
     data = np.asarray(data)
@@ -284,7 +364,9 @@ def build_pcsr(indptr, indices, data, n_rows, n_cols,
         else np.zeros(n_blocks, np.int64)
     nonempty = int((counts > 0).sum())
 
-    if S:
+    if Bal:
+        K = balanced_capacity(counts, unbalanced_cap=unbalanced_cap)
+    elif S:
         K = split_granularity(nv, nonempty)
     else:
         K = min(_round_up(max(1, counts.max() if nv else 1), SUBLANES),
@@ -298,16 +380,29 @@ def build_pcsr(indptr, indices, data, n_rows, n_cols,
                     np.zeros(1, np.int32), np.ones(1, np.int32),
                     np.zeros((1, V, K), np.float32), nnz, nv, nonempty)
 
-    chunk_block_start = np.concatenate([[0], np.cumsum(nch)])  # (n_blocks+1,)
-    trow = np.repeat(np.arange(n_blocks, dtype=np.int64), nch).astype(np.int32)
+    # emitted block order: ascending for the uniform modes, LPT
+    # (descending population, stable) for the balanced schedule
+    border = (np.argsort(-counts, kind="stable") if Bal
+              else np.arange(n_blocks, dtype=np.int64))
+    nch_ord = nch[border]
+    starts_ord = np.concatenate([[0], np.cumsum(nch_ord)])
+    first_chunk = np.empty(n_blocks, np.int64)
+    first_chunk[border] = starts_ord[:-1]     # block id → its first chunk
+    trow = np.repeat(border, nch_ord).astype(np.int32)
     init = np.zeros(C, np.int32)
-    init[chunk_block_start[:-1][nch > 0]] = 1
+    init[starts_ord[:-1][nch_ord > 0]] = 1
 
     # slot of each vector: rank within its block → (chunk, slot)
     block_vec_start = np.concatenate([[0], np.cumsum(counts)])
     rank = np.arange(nv, dtype=np.int64) - block_vec_start[bid]
-    chunk_g = chunk_block_start[bid] + rank // K
-    slot = rank % K
+    if Bal:
+        # round-robin: every chunk of the block gets ceil- or floor-even
+        # share of its vectors → near-uniform per-chunk nnz
+        chunk_g = first_chunk[bid] + rank % nch[bid]
+        slot = rank // nch[bid]
+    else:
+        chunk_g = first_chunk[bid] + rank // K
+        slot = rank % K
 
     colidx = np.zeros(C * K, np.int32)
     lrow = np.zeros(C * K, np.int32)
@@ -337,10 +432,18 @@ class PCSRStats:
     mean_block: float
     counts_hist: np.ndarray   # per-nonempty-block vector counts
 
-    def chunks_and_slots(self, S: bool, unbalanced_cap: int = UNBALANCED_CAP):
+    def chunks_and_slots(self, S: bool, unbalanced_cap: int = UNBALANCED_CAP,
+                         B: bool = False):
+        """(C, K, slots) of the layout ⟨S, B⟩ would pack — the exact grid
+        extents the cost model prices.  ``B=True`` runs the same
+        ``balanced_capacity`` search the packer runs, so pricing and
+        packing cannot disagree about the balanced chunk geometry."""
         if self.n_nonempty_blocks == 0:
             return 1, SUBLANES, SUBLANES
-        if S:
+        if B:
+            K = balanced_capacity(self.counts_hist,
+                                  unbalanced_cap=unbalanced_cap)
+        elif S:
             K = split_granularity(self.nnz_vec, self.n_nonempty_blocks)
         else:
             K = min(_round_up(max(1, self.max_block), SUBLANES),

@@ -161,11 +161,25 @@ class GraphSpec:
 
 def corpus(scale: str = "small") -> list[GraphSpec]:
     """Deterministic graph corpus. ``small`` ≈ unit tests / CI;
-    ``bench`` ≈ decider training + paper-table benchmarks."""
+    ``bench`` ≈ decider training + paper-table benchmarks; ``skewed`` ≈
+    degree-skew stressors (high-CV power-law / co-citation graphs, where
+    the balanced ``B`` chunk schedule should win) plus uniform-degree
+    controls (where it should NOT be selected) — the corpus behind
+    ``benchmarks/bench_spmm.py`` and the balanced-scheduling tests."""
     out = []
 
     def add(name, family, g):
         out.append(GraphSpec(name, g, family))
+
+    if scale == "skewed":
+        add("rmat11", "powerlaw", rmat(11, 8, seed=11))
+        add("rmat12", "powerlaw", rmat(12, 6, seed=12))
+        add("ba2k", "powerlaw", ba(2000, 4, seed=13))
+        add("ba4k", "powerlaw", ba(4000, 3, seed=14))
+        add("clones1k", "cocitation", clones(1000, 10, seed=15))
+        add("kreg2k", "uniform", kregular(2000, 8, seed=16))
+        add("grid48", "mesh", grid2d(48, seed=17))
+        return out
 
     if scale == "small":
         add("rmat10", "powerlaw", rmat(10, 8, seed=1))

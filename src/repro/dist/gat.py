@@ -15,8 +15,9 @@ SPMD ``shard_map`` program**, multi-head:
   ``packing.pack_shards(H=)``) — exactly two Pallas kernels per shard,
   α never in HBM, one compilation for the whole head batch.
 * **backward** — a ``custom_vjp`` (Pallas backend): residuals are the
-  primals plus the per-shard raw logits and ``(H·n_blocks, R)`` row
-  stats (flash-style — no α residual); the backward shard_map program
+  primals plus the per-shard raw logits and the tile-aligned
+  ``(H·n_blocks·SUBLANES, LANES)`` row stats (flash-style — no α
+  residual); the backward shard_map program
   re-exchanges the K/Vf halo (recompute over memory), recomputes α from
   the stats, runs dα-SDDMM, dQ-SpMM and the transpose-PCSR dK/dVf SpMMs
   as Pallas kernels, and scatters the halo blocks of dK/dVf back to
@@ -43,7 +44,8 @@ import numpy as np
 
 from repro.core.engine import (_engine, _engine_sddmm, _slot_rows,
                                attend_scores)
-from repro.core.pcsr import slot_transfer_map, transpose_pcsr
+from repro.core.pcsr import (LANES, SUBLANES, slot_transfer_map,
+                             transpose_pcsr)
 
 from .halo import halo_exchange, halo_scatter_back
 from .packing import AXIS, PackedShards, pack_shards, shard_map_2d
@@ -87,7 +89,7 @@ class GatShardPack:
     H: int
     fwd: PackedShards
     logits_pad: int              # max over shards of H·C·V·K
-    stats_pad: int               # max over shards of H·n_blocks·R
+    stats_pad: int               # max over shards of H·nb·SUBLANES·LANES
     bwd: Optional[PackedShards] = None    # transpose PCSRs (lazy)
     f_idx: Optional[jnp.ndarray] = None   # (P, L) A-layout slot positions
     t_idx: Optional[jnp.ndarray] = None   # (P, L) Aᵀ-layout positions
@@ -101,7 +103,7 @@ def build_gat_pack(pcsrs, H: int,
     return GatShardPack(
         H, fwd if fwd is not None else pack_shards(pcsrs, H=H),
         logits_pad=max(H * p.num_chunks * p.config.V * p.K for p in pcsrs),
-        stats_pad=max(H * p.n_blocks * p.config.R for p in pcsrs))
+        stats_pad=max(H * p.n_blocks * SUBLANES * LANES for p in pcsrs))
 
 
 def ensure_gat_bwd_pack(pack: GatShardPack) -> None:
@@ -219,7 +221,8 @@ def _pallas_bwd_branch(pcsr, pcsr_t, *, H: int, n_out: int, slope: float,
     from repro.kernels.paramspmm.kernel import paramspmm_kernel
     from repro.kernels.paramspmm.ops import _pad_chunk_vals, _pad_cols
     from repro.kernels.sddmm.kernel import sddmm_kernel
-    from repro.kernels.sddmm.ops import _pad_q, normalize_from_stats
+    from repro.kernels.sddmm.ops import (_pad_q, normalize_from_stats,
+                                         unpack_stats)
 
     cfg = pcsr.config
     C, K, V, W = pcsr.num_chunks, pcsr.K, cfg.V, cfg.W
@@ -252,10 +255,14 @@ def _pallas_bwd_branch(pcsr, pcsr_t, *, H: int, n_out: int, slope: float,
         # single-head slot→row map: head 0's prefix has zero offsets
         lr1, tr1 = flrow[:C * K], ftrow[:C]
         rows1 = _slot_rows(lr1, tr1, V=V, R=R, K=K).reshape(-1)
-        # α recompute from the stats residuals (no α residual saved)
+        # α recompute from the stats residuals (no α residual saved);
+        # stats travel flat in the kernels' tile-aligned layout
         logits = lgf[:H * C * V * K].reshape(H, C, V, K)
-        rowmax = rmf[:H * nb * R].reshape(H, nb, R)
-        rowsum = rsf[:H * nb * R].reshape(H, nb, R)
+        untile = lambda x: unpack_stats(
+            x[:H * nb * SUBLANES * LANES].reshape(H * nb * SUBLANES, LANES),
+            R).reshape(H, nb, R)
+        rowmax = untile(rmf)
+        rowsum = untile(rsf)
         alpha = jax.vmap(lambda lg, rm, rs: normalize_from_stats(
             lg, rm, rs, lr1, tr1, R=R, V=V, K=K))(logits, rowmax, rowsum)
         # dα — raw SDDMM kernel over the uncovered head-tiled steering

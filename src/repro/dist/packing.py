@@ -16,6 +16,13 @@ Two pieces every SPMD program in ``repro.dist`` is built from:
   the coverage chunks last, so a branch can recover the *uncovered*
   arrays by reshaping ``(H, C_cov·m)`` and slicing ``[:, :C·m]`` — no
   gather, no second pack (the prefix property the GAT branches rely on).
+
+Config heterogeneity is per *shard*: each partition's cost model may
+pick a different ⟨W, F, V, S⟩ — including the balanced ``B`` chunk
+schedule for degree-skewed partitions — and the pack only ever sees the
+resulting steering arrays (padded to the max C·K across shards), so
+balanced and uniform shards coexist in one mesh tensor with no special
+casing here.
 """
 from __future__ import annotations
 

@@ -18,8 +18,11 @@ Parameter mapping (paper → here):
 Fusion (this file's reason to exist beyond the plain gather-scatter):
 
 * **Softmax prologue** (``prologue=True``): ``vals`` carries raw attention
-  *logits* (masked slots = −inf) and two extra ``(n_blocks, R)`` inputs
-  carry the per-row online-softmax stats the fused SDDMM produced.  The
+  *logits* (masked slots = −inf) and two extra tile-aligned
+  ``(n_blocks·SUBLANES, LANES)`` inputs — one (8, 128) tile per block,
+  row stats in sublane 0 — carry the per-row online-softmax stats the
+  fused SDDMM produced (its native output layout, aligned so the fused
+  path compiles on real TPU, not just in interpret mode).  The
   attention weight α = exp(logit − rowmax)/rowsum is computed in-register
   while the gathered B row is being consumed — the interstitial
   elementwise normalize pass between SDDMM and SpMM disappears, making
@@ -45,6 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pcsr import LANES, SUBLANES
 
 ACTIVATIONS = ("none", "relu", "leaky_relu")
 
@@ -94,7 +99,10 @@ def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
         def _epilogue():
             y = out_ref[...]
             if has_scale:
-                y = y * scale_ref[0, :][:, None].astype(y.dtype)
+                # per-row scales live in sublane 0, lanes 0..R−1 of the
+                # block's aligned stats tile
+                sc = scale_ref[0, pl.ds(0, y.shape[0])]
+                y = y * sc[:, None].astype(y.dtype)
             if has_bias:
                 y = y + bias_ref[0, :][None, :].astype(y.dtype)
             if activation == "relu":
@@ -113,17 +121,30 @@ def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
 
     B_padded: (n_b, J·dblk).  Returns C_padded (n_blocks·R, J·dblk).
 
-    Optional fusion operands:
-      rowmax/rowsum (n_blocks, R) — softmax prologue stats (vals = logits);
-      scale (n_blocks, R)         — per-row epilogue scale (degree norm);
-      bias (1, J·dblk)            — per-feature epilogue bias;
-      activation                  — "none" | "relu" | "leaky_relu" epilogue.
+    Optional fusion operands — the per-row ones all use the tile-aligned
+    stats layout ``(n_blocks·SUBLANES, LANES)`` (one (8, 128) f32 tile per
+    block, row r of block b at ``[b·SUBLANES, r]``), so every BlockSpec is
+    a whole hardware tile and the fused path compiles on real TPU:
+      rowmax/rowsum — softmax prologue stats (vals = logits), the fused
+                      SDDMM's native output layout;
+      scale         — per-row epilogue scale (degree norm), packed by
+                      ``ops._pack_scale``;
+      bias (SUBLANES, J·dblk) — per-feature epilogue bias (row 0 real);
+      activation    — "none" | "relu" | "leaky_relu" epilogue.
     """
     if activation not in ACTIVATIONS:
         raise ValueError(f"activation {activation!r} not in {ACTIVATIONS}")
+    assert R <= LANES, f"R={R} must fit one stats-tile lane row"
+    stats_shape = (n_blocks * SUBLANES, LANES)
+    for name, arr in (("rowmax", rowmax), ("rowsum", rowsum),
+                      ("scale", scale)):
+        assert arr is None or arr.shape == stats_shape, (
+            f"{name} must be tile-aligned {stats_shape}, got {arr.shape}")
     C = trow.shape[0]
     dim_pad = B_padded.shape[1]
     assert dim_pad % dblk == 0
+    assert bias is None or bias.shape == (SUBLANES, dim_pad), (
+        f"bias must be ({SUBLANES}, {dim_pad}), got {bias.shape}")
     J = dim_pad // dblk
     grid = (J, C, K)
     prologue = rowmax is not None
@@ -138,16 +159,16 @@ def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
     operands = [vals, B_padded]
     if prologue:
         stats_spec = pl.BlockSpec(
-            (1, R), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], 0))
+            (SUBLANES, LANES), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], 0))
         in_specs += [stats_spec, stats_spec]
         operands += [rowmax, rowsum]
     if scale is not None:
         in_specs.append(pl.BlockSpec(
-            (1, R), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], 0)))
+            (SUBLANES, LANES), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], 0)))
         operands.append(scale)
     if bias is not None:
         in_specs.append(pl.BlockSpec(
-            (1, dblk), lambda j, c, k, ci, lr, tr, it, fi: (0, j)))
+            (SUBLANES, dblk), lambda j, c, k, ci, lr, tr, it, fi: (0, j)))
         operands.append(bias)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pcsr import PCSR, LANES
+from repro.core.pcsr import PCSR, LANES, SUBLANES
 from .kernel import paramspmm_kernel
 
 
@@ -38,9 +38,15 @@ def _pad_cols(B, dblk: int):
     return B, dim_pad
 
 
-def _pad_rows_2d(x, n_rows: int):
-    """Pad/reshape a flat per-row vector to the kernel's (n_blocks, R)."""
-    return jnp.pad(x.reshape(-1), (0, n_rows - x.size))
+def _pack_scale(x, n_blocks: int, R: int):
+    """Pack a flat per-row vector (≤ n_blocks·R entries) into the kernel's
+    tile-aligned per-row layout ``(n_blocks·SUBLANES, LANES)`` — one
+    (8, 128) tile per block, row r of block b at ``[b·SUBLANES, r]``."""
+    dense = jnp.pad(x.reshape(-1), (0, n_blocks * R - x.size)
+                    ).reshape(n_blocks, R)
+    out = jnp.zeros((n_blocks, SUBLANES, LANES), x.dtype)
+    out = out.at[:, 0, :R].set(dense)
+    return out.reshape(n_blocks * SUBLANES, LANES)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -53,14 +59,23 @@ def _call(colidx, lrow, trow, init, fini, vals, B, rowmax=None, rowsum=None,
 
     ``scale`` is a flat per-row vector (≤ n_blocks·R entries), ``bias`` a
     flat per-feature vector (≤ dim entries); both are padded here to the
-    kernel's block shapes.  ``rowmax``/``rowsum`` are the (n_blocks, R)
-    online-softmax stats from the fused SDDMM (vals = raw logits).
+    kernel's tile-aligned block shapes.  ``rowmax``/``rowsum`` are the
+    online-softmax stats from the fused SDDMM (vals = raw logits) in its
+    native tile-aligned ``(n_blocks·SUBLANES, LANES)`` layout — asserted
+    here so a dense ``(n_blocks, R)`` array (which only interpret mode
+    would tolerate) fails loudly at trace time.
     """
+    stats_shape = (n_blocks * SUBLANES, LANES)
+    for name, arr in (("rowmax", rowmax), ("rowsum", rowsum)):
+        assert arr is None or arr.shape == stats_shape, (
+            f"{name} must be tile-aligned {stats_shape} "
+            f"(the fused SDDMM's native layout), got {arr.shape}")
     B_padded, dim_pad = _pad_cols(B, dblk)
     if scale is not None:
-        scale = _pad_rows_2d(scale, n_blocks * R).reshape(n_blocks, R)
+        scale = _pack_scale(scale, n_blocks, R)
     if bias is not None:
         bias = jnp.pad(bias.reshape(-1), (0, dim_pad - bias.size))[None, :]
+        bias = jnp.pad(bias, ((0, SUBLANES - 1), (0, 0)))   # tile-aligned
     out = paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded,
                            n_blocks=n_blocks, R=R, V=V, K=K, dblk=dblk,
                            rowmax=rowmax, rowsum=rowsum, scale=scale,
@@ -114,8 +129,11 @@ def paramspmm_with_vals(pcsr: PCSR, vals, B, *, stats=None, scale=None,
     ``stats=(rowmax, rowsum)`` enables the fused softmax **prologue**:
     ``vals`` are then the raw logits from ``sddmm_softmax_stats`` (masked
     slots −inf) and α = exp(logit − rowmax)/rowsum is computed in-register —
-    no interstitial normalize pass.  Single-head stats are ``(n_blocks, R)``;
-    multi-head ``(H·n_blocks, R)`` (the fused SDDMM's native layout).
+    no interstitial normalize pass.  Stats use the fused SDDMM's native
+    tile-aligned layout ``(n_blocks·SUBLANES, LANES)`` single-head,
+    ``(H·n_blocks·SUBLANES, LANES)`` multi-head (one (8, 128) tile per
+    head-tiled block; ``repro.kernels.sddmm.ops.unpack_stats`` gives the
+    dense view).
 
     ``scale``/``bias``/``activation`` enable the fused **epilogue**
     (single-head only): per-row scale (flat, ≤ n_rows), per-feature bias

@@ -17,10 +17,15 @@ Block selection per step ``(c, k, j)``:
 ``sddmm_softmax_kernel`` extends the same traversal with a fused edge
 softmax epilogue: when a slot's dot product completes (its last dim tile),
 the score is masked, scaled, LeakyReLU'd, and folded into per-row online
-softmax statistics kept in two ``(n_blocks, R)`` outputs addressed by
-``trow[c]`` — the same consecutive-revisit trick, so with ``S=True`` a
-row split across chunks accumulates its max/normalizer exactly while the
-stats block is VMEM resident.
+softmax statistics kept in two tile-aligned ``(n_blocks·SUBLANES, LANES)``
+outputs addressed by ``trow[c]`` — one full ``(8, 128)`` f32 tile per
+block, row stats in sublane 0 / lanes 0..R−1 (R ≤ 32 < 128), so the
+block shape is exactly one hardware tile and the layout compiles on real
+TPU (a ``(1, R)`` block is neither sublane- nor lane-aligned and only
+works in interpret mode).  The same consecutive-revisit trick applies:
+with ``S=True`` a row split across chunks accumulates its max/normalizer
+exactly while the stats tile is VMEM resident.  ``ops.unpack_stats``
+recovers the dense ``(n_blocks, R)`` view for plain-JAX consumers.
 """
 from __future__ import annotations
 
@@ -30,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pcsr import LANES, SUBLANES
 
 
 def _kernel(colidx_ref, lrow_ref, trow_ref,             # scalar prefetch
@@ -77,8 +84,9 @@ def _fused_kernel(colidx_ref, lrow_ref, trow_ref, init_ref,   # scalar prefetch
     # Softmax epilogue: once the slot's dot product is complete (last dim
     # tile), scale + LeakyReLU it and fold it into the block's running
     # row-max / row-sum-of-exp (flash-attention-style online rescale).  The
-    # stats block lives at trow[c], so split chunks of one block accumulate
-    # into the same VMEM-resident (1, R) tiles across consecutive revisits.
+    # stats tile lives at trow[c] (one aligned (8, 128) tile per block, row
+    # stats in sublane 0), so split chunks of one block accumulate into the
+    # same VMEM-resident tiles across consecutive revisits.
     @pl.when(j == J - 1)
     def _epilogue():
         m = vals_ref[0, :, k] != 0           # (V,) real-edge mask
@@ -108,17 +116,19 @@ def sddmm_softmax_kernel(colidx, lrow, trow, init, vals, Q_padded, K_padded, *,
     Same (C, K, J) traversal as ``sddmm_kernel``, plus an epilogue on each
     slot's final dim tile that applies ``scale`` and LeakyReLU(``slope``),
     masks padding slots to −inf, and maintains per-row online-softmax
-    statistics in two extra ``(n_blocks, R)`` outputs.  Returns
-    ``(logits (C, V, K), rowmax (n_blocks, R), rowsum (n_blocks, R))`` where
-    ``rowsum`` is Σ exp(logit − rowmax) over each row's real edges — exactly
-    the operands the fused ParamSpMM softmax *prologue* consumes, so the
-    GAT forward needs no elementwise pass between the two kernels.
+    statistics in two extra tile-aligned ``(n_blocks·SUBLANES, LANES)``
+    outputs (one (8, 128) tile per block; row r of block b lives at
+    ``[b·SUBLANES, r]``).  Returns ``(logits (C, V, K), rowmax, rowsum)``
+    where ``rowsum`` is Σ exp(logit − rowmax) over each row's real edges —
+    exactly the operands the fused ParamSpMM softmax *prologue* consumes,
+    so the GAT forward needs no elementwise pass between the two kernels.
     Rows of never-visited (empty) blocks hold garbage; no real slot maps to
     them, and the prologue's −inf-logit convention keeps even padding slots
     that read garbage stats at exactly α = 0.
     """
     C = trow.shape[0]
     R = V * W
+    assert R <= LANES, f"R={R} must fit one stats-tile lane row"
     dim_pad = Q_padded.shape[1]
     assert dim_pad % dblk == 0
     assert Q_padded.shape[0] % V == 0
@@ -142,9 +152,9 @@ def sddmm_softmax_kernel(colidx, lrow, trow, init, vals, Q_padded, K_padded, *,
         out_specs=[
             pl.BlockSpec((1, V, K),
                          lambda c, k, j, ci, lr, tr, it: (c, 0, 0)),
-            pl.BlockSpec((1, R),
+            pl.BlockSpec((SUBLANES, LANES),
                          lambda c, k, j, ci, lr, tr, it: (tr[c], 0)),
-            pl.BlockSpec((1, R),
+            pl.BlockSpec((SUBLANES, LANES),
                          lambda c, k, j, ci, lr, tr, it: (tr[c], 0)),
         ],
     )
@@ -154,8 +164,8 @@ def sddmm_softmax_kernel(colidx, lrow, trow, init, vals, Q_padded, K_padded, *,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((C, V, K), Q_padded.dtype),
-            jax.ShapeDtypeStruct((n_blocks, R), Q_padded.dtype),
-            jax.ShapeDtypeStruct((n_blocks, R), Q_padded.dtype),
+            jax.ShapeDtypeStruct((n_blocks * SUBLANES, LANES), Q_padded.dtype),
+            jax.ShapeDtypeStruct((n_blocks * SUBLANES, LANES), Q_padded.dtype),
         ],
         interpret=interpret,
         name=f"sddmm_softmax_v{V}_k{K}_w{W}_d{dblk}",

@@ -22,8 +22,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pcsr import PCSR
+from repro.core.pcsr import PCSR, LANES, SUBLANES
 from repro.kernels.paramspmm.ops import _pad_cols
+
+
+def stats_rows(n_blocks: int) -> int:
+    """Leading extent of the tile-aligned stats layout: one full
+    ``(SUBLANES, LANES)`` f32 tile per output block."""
+    return n_blocks * SUBLANES
+
+
+def unpack_stats(stats, R: int):
+    """Dense ``(..., n_blocks, R)`` view of tile-aligned kernel stats.
+
+    The fused SDDMM keeps per-row softmax stats in one aligned
+    ``(SUBLANES, LANES)`` tile per block — row r of block b at
+    ``[b·SUBLANES, r]`` — so the stats BlockSpec is exactly one hardware
+    tile and compiles on real TPU.  Plain-JAX consumers (the reference
+    normalize, the flash-recompute backward, the distributed GAT
+    branches) call this to recover the dense view."""
+    lead = stats.shape[:-2]
+    nb = stats.shape[-2] // SUBLANES
+    return stats.reshape(lead + (nb, SUBLANES, LANES))[..., 0, :R]
+
+
+def pack_stats(dense, R: int):
+    """Inverse of ``unpack_stats``: lay a dense ``(..., n_blocks, R)``
+    per-row stat onto the kernel's tile-aligned layout (zeros elsewhere —
+    only sublane 0 / lanes < R are ever read)."""
+    lead = dense.shape[:-2]
+    nb = dense.shape[-2]
+    out = jnp.zeros(lead + (nb, SUBLANES, LANES), dense.dtype)
+    out = out.at[..., 0, :R].set(dense)
+    return out.reshape(lead + (nb * SUBLANES, LANES))
 
 
 def _pad_q(Q, n_rows_pad: int, dblk: int):
@@ -95,9 +126,16 @@ def normalize_from_stats(logits, rowmax, rowsum, lrow, trow, *, R, V, K):
     rows = (trow[:, None, None].astype(jnp.int32) * R
             + lrow.reshape(C, 1, K) * V
             + jnp.arange(V, dtype=jnp.int32)[None, :, None])
+    # Fully-masked/empty rows hold rowmax = −inf, rowsum = 0 — or outright
+    # garbage (NaN included) when their block was never visited by the
+    # SDDMM.  Both guards must be NaN-proof: ``isfinite`` rejects NaN and
+    # ±inf, and ``rowsum > 0`` is False for NaN, so such rows normalize
+    # against (0, 1) and their −inf logits come out exactly α = 0 — a
+    # ``maximum(rowsum, eps)`` denominator would propagate NaN instead.
     rm = rowmax.reshape(-1)
-    rm = jnp.where(jnp.isfinite(rm), rm, 0.0)          # empty rows
-    denom = jnp.maximum(rowsum.reshape(-1), 1e-30)
+    rm = jnp.where(jnp.isfinite(rm), rm, 0.0)
+    rs = rowsum.reshape(-1)
+    denom = jnp.where((rs > 0) & jnp.isfinite(rs), rs, 1.0)
     # masked/padding slots carry logit −inf → exp(−inf − finite) = 0 exact
     return jnp.exp(logits - rm[rows]) / denom[rows]
 
@@ -114,7 +152,9 @@ def sddmm_softmax_stats(pcsr: PCSR, Q, K, *, scale: float | None = None,
 
     ``scale`` defaults to 1/√d.  Shapes: logits (C, V, K) per (n, d)
     inputs, (H, C, V, K) per (H, n, d); rowmax/rowsum are always the
-    kernel-native ``(H·n_blocks, R)`` (head-tiled blocks).
+    kernel-native tile-aligned ``(H·n_blocks·SUBLANES, LANES)`` layout
+    (head-tiled blocks, one (8, 128) tile per block) — ``unpack_stats``
+    recovers the dense ``(H·n_blocks, R)`` view.
     """
     Q = jnp.asarray(Q)
     K_mat = jnp.asarray(K)
@@ -141,10 +181,11 @@ def sddmm_softmax_stats(pcsr: PCSR, Q, K, *, scale: float | None = None,
 def _normalize_heads(logits, rowmax, rowsum, lrow, trow, *, R, V, K, H):
     f = lambda lg, rm, rs: normalize_from_stats(lg, rm, rs, lrow, trow,
                                                 R=R, V=V, K=K)
+    rm = unpack_stats(rowmax, R)              # (H·n_blocks, R) dense view
+    rs = unpack_stats(rowsum, R)
     if H == 1:
-        return f(logits[0], rowmax, rowsum)[None]
-    return jax.vmap(f)(logits, rowmax.reshape(H, -1, R),
-                       rowsum.reshape(H, -1, R))
+        return f(logits[0], rm, rs)[None]
+    return jax.vmap(f)(logits, rm.reshape(H, -1, R), rs.reshape(H, -1, R))
 
 
 def sddmm_softmax(pcsr: PCSR, Q, K, *, scale: float | None = None,

@@ -1,0 +1,243 @@
+"""Balanced (B-mode) chunk schedule: packer invariants, value-exactness
+against the engine oracle on degree-skewed graphs, transpose round-trip
+through the GAT backward, cost-model selection, head-aware oracle labels,
+and the fully-masked-row softmax guards (forward AND flash backward)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import oracle_search
+from repro.core.cost_model import CostModel
+from repro.core.engine import engine_spmm, make_gat_message_fn
+from repro.core.pcsr import (SUBLANES, SpMMConfig, balanced_capacity,
+                             build_pcsr, config_space, transpose_pcsr)
+from repro.core.sparse import CSRMatrix
+from repro.data.graphs import ba, corpus, kregular, rmat
+from repro.kernels.paramspmm.ops import paramspmm
+
+from conftest import random_csr
+from test_pcsr import _dense_from_pcsr
+from _propcheck import floats, integers, propcases, sampled_from
+
+
+def _build(csr, cfg):
+    return build_pcsr(csr.indptr, csr.indices, csr.data,
+                      csr.n_rows, csr.n_cols, cfg)
+
+
+def _chunk_pop(p):
+    """Occupied vector-slots per chunk (a slot is occupied when any of
+    its V values is nonzero)."""
+    return (np.asarray(p.vals) != 0).any(axis=1).sum(axis=1)
+
+
+# ------------------------------------------------------------- packer
+def test_config_validation():
+    with pytest.raises(ValueError):
+        SpMMConfig(V=1, S=False, W=8, B=True)   # B requires S
+    cfg = SpMMConfig(V=2, S=True, W=4, B=True)
+    assert cfg.astuple() == (4, cfg.F, 2, True, True)
+
+
+def test_balanced_capacity_uniform_and_skewed():
+    # uniform populations: every candidate quantile is the same value —
+    # K is its sublane roundup, one chunk per block
+    assert balanced_capacity(np.full(50, 24)) == 24
+    assert balanced_capacity(np.array([])) == SUBLANES
+    # heavy skew: one 1000-pop block among 100 8-pop blocks must NOT
+    # stretch every chunk to 1000 slots
+    counts = np.concatenate([[1000], np.full(100, 8)])
+    k = balanced_capacity(counts)
+    assert k < 1000 and k % SUBLANES == 0
+
+
+def test_space_includes_balanced_after_uniform():
+    space = config_space(64)
+    bal = [c for c in space if c.B]
+    assert bal and all(c.S for c in bal)
+    # B variants come last → exact price ties resolve to uniform configs
+    first_bal = next(i for i, c in enumerate(space) if c.B)
+    assert all(c.B for c in space[first_bal:])
+
+
+@pytest.mark.parametrize("case", propcases(
+    15, n=integers(16, 80), density=floats(0.02, 0.3),
+    v=sampled_from([1, 2]), w=sampled_from([2, 8]),
+    seed=integers(0, 1000)), ids=str)
+def test_balanced_pcsr_encodes_matrix_property(case):
+    """Round-robin balanced packing is a pure steering-array relayout:
+    the encoded matrix is bit-identical to the CSR, skew included."""
+    rng = np.random.default_rng(case.seed)
+    csr, A = random_csr(rng, case.n, case.density, skew=True)
+    p = _build(csr, SpMMConfig(V=case.v, S=True, W=case.w, B=True))
+    np.testing.assert_allclose(_dense_from_pcsr(p), A, atol=1e-6)
+    # grouped trow: all chunks of a block are contiguous (the VMEM
+    # revisit/fini machinery needs grouping, not ascending order)
+    tr = np.asarray(p.trow)
+    starts = {int(t): i for i, t in reversed(list(enumerate(tr)))}
+    for b, s in starts.items():
+        run = tr[s:s + (tr == b).sum()]
+        assert (run == b).all()
+
+
+def test_balanced_fat_row_splits_many_chunks_near_uniform():
+    """A single fat row must shatter into ≥3 chunks and the per-chunk
+    occupancy must come out near-uniform (the whole point of B-mode)."""
+    n = 256
+    rng = np.random.default_rng(3)
+    A = (rng.random((n, n)) < 0.02).astype(np.float32)
+    A[0] = 1.0                                  # one 256-degree fat row
+    A *= rng.standard_normal((n, n)).astype(np.float32)
+    A[0, A[0] == 0] = 1.0
+    csr = CSRMatrix.from_dense(A)
+    p = _build(csr, SpMMConfig(V=1, S=True, W=8, B=True))
+    np.testing.assert_allclose(_dense_from_pcsr(p), A, atol=1e-6)
+    fat_block = 0                               # row 0 lives in block 0
+    n_fat_chunks = int((np.asarray(p.trow) == fat_block).sum())
+    assert n_fat_chunks >= 3
+    occ = _chunk_pop(p)
+    # round-robin packing: occupancy of the fat block's chunks differs
+    # by at most 1 vector-slot between any two of them
+    fat_occ = occ[np.asarray(p.trow) == fat_block]
+    assert fat_occ.max() - fat_occ.min() <= 1
+    # and the fat block no longer dictates everyone's capacity
+    pu = _build(csr, SpMMConfig(V=1, S=True, W=8))
+    assert p.K < pu.K
+    assert p.num_slots < pu.num_slots
+
+
+def test_balanced_reduces_slots_on_skewed_graphs():
+    for name, g in [("rmat", rmat(10, 8, seed=1)),
+                    ("ba", ba(1000, 4, seed=5))]:
+        cfg_u = SpMMConfig(V=1, S=True, W=8)
+        cfg_b = SpMMConfig(V=1, S=True, W=8, B=True)
+        pu, pb = _build(g, cfg_u), _build(g, cfg_b)
+        assert pb.num_slots < pu.num_slots, name
+        np.testing.assert_allclose(_dense_from_pcsr(pb).sum(),
+                                   _dense_from_pcsr(pu).sum(), rtol=1e-5)
+
+
+def test_balanced_empty_blocks_and_engine_oracle():
+    """Empty row band (whole empty blocks) + skew: engine and Pallas on
+    the balanced layout both reproduce the dense product exactly."""
+    n = 96
+    rng = np.random.default_rng(7)
+    A = ((rng.random((n, n)) < 0.1)
+         * rng.standard_normal((n, n))).astype(np.float32)
+    A[16:48] = 0.0                              # empty blocks
+    A[0, :] = rng.standard_normal(n).astype(np.float32)   # fat row
+    csr = CSRMatrix.from_dense(A)
+    B = rng.standard_normal((n, 20)).astype(np.float32)
+    ref = A @ B
+    for v in (1, 2):
+        p = _build(csr, SpMMConfig(V=v, S=True, W=8 // v, B=True))
+        np.testing.assert_allclose(np.asarray(engine_spmm(p, B)), ref,
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(paramspmm(p, jnp.asarray(B))),
+                                   ref, atol=1e-4, rtol=1e-4)
+
+
+def test_balanced_transpose_roundtrip_and_multihead_gat_backward(rng):
+    """GAT on a balanced PCSR: the transpose PCSR (itself balanced-built)
+    and the slot transfer maps round-trip the layout — multi-head pallas
+    forward and flash backward match the engine."""
+    n, d, H = 48, 8, 2
+    csr, A = random_csr(rng, n, 0.15, skew=True)
+    p = _build(csr, SpMMConfig(V=2, S=True, W=4, B=True))
+    pt = transpose_pcsr(p)
+    np.testing.assert_allclose(_dense_from_pcsr(pt), A.T, atol=1e-6)
+    f_eng = make_gat_message_fn(p, backend="engine")
+    f_pal = make_gat_message_fn(p, backend="pallas", interpret=True)
+    Q = jnp.asarray(rng.standard_normal((H, n, d)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((H, n, d)), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal((H, n, 6)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(f_pal(Q, K, Vf)),
+                               np.asarray(f_eng(Q, K, Vf)),
+                               atol=1e-4, rtol=1e-4)
+    loss = lambda f: lambda q, k, v: (f(q, k, v) ** 2).sum()
+    g_eng = jax.grad(loss(f_eng), argnums=(0, 1, 2))(Q, K, Vf)
+    g_pal = jax.grad(loss(f_pal), argnums=(0, 1, 2))(Q, K, Vf)
+    for a, b in zip(g_eng, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------- cost-model selection
+def test_cost_model_selects_balanced_on_skew_only():
+    dim = 32
+    skew_hits = 0
+    for spec in corpus("skewed"):
+        cm = CostModel(spec.csr)
+        best, t_best = cm.best(dim, config_space(dim))
+        space_u = [c for c in config_space(dim) if not c.B]
+        _, t_uni = cm.best(dim, space_u)
+        if spec.family == "uniform" or spec.family == "mesh":
+            # uniform-degree controls: B must NOT be selected (exact
+            # ties resolve to the uniform config by construction)
+            assert not best.B, spec.name
+        elif spec.name in ("rmat11", "ba2k"):
+            assert best.B, spec.name
+            assert t_best < t_uni, spec.name
+            skew_hits += 1
+    assert skew_hits == 2
+
+
+def test_oracle_search_head_aware_labels_differ():
+    """oracle_search(H=4) must label at least one corpus graph with a
+    different best config than H=1 — head tiling shrinks the per-head
+    dim and multiplies the grid, so the optimum genuinely moves."""
+    dim = 256
+    diff = 0
+    for spec in corpus("small"):
+        r1 = oracle_search(spec.csr, dim, op="gat", H=1)
+        r4 = oracle_search(spec.csr, dim, op="gat", H=4)
+        if r1.best_config != r4.best_config:
+            diff += 1
+    assert diff >= 1
+
+
+def test_oracle_search_measured_accepts_heads():
+    g = kregular(256, 8, seed=0)
+    space = [SpMMConfig(V=1, S=True, W=8), SpMMConfig(V=1, S=True, W=8, B=True)]
+    r = oracle_search(g, 16, space=space, mode="measured", reps=1, H=2)
+    assert r.best_config in space
+    assert all(np.isfinite(t) for t in r.times.values())
+
+
+# ----------------------------------------- fully-masked-row regression
+def test_fully_masked_rows_gat_forward_and_backward(rng):
+    """Rows whose stored edges are ALL masked (zero-valued) have
+    rowmax = −inf / rowsum = 0 after the stats kernel — the guards must
+    produce exact α = 0, zero output rows, and finite gradients through
+    the flash-recompute backward (a NaN-propagating ``maximum(rowsum,
+    eps)`` guard fails this)."""
+    n = 64
+    A = ((rng.random((n, n)) < 0.2)
+         * rng.standard_normal((n, n))).astype(np.float32)
+    A[A[:, 0] != 0, 0] = 0.0
+    rows, cols = np.nonzero(A)
+    vals = A[rows, cols].copy()
+    masked_rows = np.unique(rows)[::4]           # every 4th nonempty row:
+    vals[np.isin(rows, masked_rows)] = 0.0       # ALL its edges masked
+    csr = CSRMatrix.from_coo(rows, cols, vals, n, n, sum_duplicates=False)
+    Q = jnp.asarray(rng.standard_normal((n, 12)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((n, 12)), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    for cfg in (SpMMConfig(V=1, S=True, W=8),
+                SpMMConfig(V=2, S=True, W=4, B=True)):
+        p = _build(csr, cfg)
+        f_eng = make_gat_message_fn(p, backend="engine")
+        f_pal = make_gat_message_fn(p, backend="pallas", interpret=True)
+        out = np.asarray(f_pal(Q, K, Vf))
+        assert np.isfinite(out).all()
+        assert (out[masked_rows] == 0).all()
+        np.testing.assert_allclose(out, np.asarray(f_eng(Q, K, Vf)),
+                                   atol=1e-4, rtol=1e-4)
+        loss = lambda f: lambda q, k, v: (f(q, k, v) ** 2).sum()
+        g_pal = jax.grad(loss(f_pal), argnums=(0, 1, 2))(Q, K, Vf)
+        g_eng = jax.grad(loss(f_eng), argnums=(0, 1, 2))(Q, K, Vf)
+        for a, b in zip(g_pal, g_eng):
+            assert np.isfinite(np.asarray(a)).all()
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-4)

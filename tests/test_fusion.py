@@ -9,7 +9,8 @@ import pytest
 from repro.core.cost_model import CostModel, unfused_penalty
 from repro.core.engine import (ParamSpMMOperator, engine_spmm,
                                engine_spmm_fused, make_gat_message_fn)
-from repro.core.pcsr import SpMMConfig, build_pcsr, config_space
+from repro.core.pcsr import (LANES, SUBLANES, SpMMConfig, build_pcsr,
+                             config_space)
 from repro.core.sparse import CSRMatrix
 from repro.kernels.paramspmm.ops import paramspmm, paramspmm_with_vals
 from repro.kernels.sddmm.ops import sddmm_softmax, sddmm_softmax_stats
@@ -255,13 +256,14 @@ def test_gat_recompute_backward_drops_alpha_residual(rng):
     K = jnp.asarray(rng.standard_normal((40, 16)), jnp.float32)
     Vf = jnp.asarray(rng.standard_normal((40, 12)), jnp.float32)
     out, vjp = jax.vjp(f_pal, Q, K, Vf)
-    # residuals: Q, K, Vf mirrors + logits (C, V, K) + 2 stats (nb, R) —
-    # an α-shaped residual would make it 5 slot-shaped tensors, not 4
+    # residuals: Q, K, Vf mirrors + logits (C, V, K) + 2 tile-aligned
+    # stats (nb·SUBLANES, LANES) — an α-shaped residual would make it
+    # 2 slot-shaped tensors, not 1
     slot_shaped = [x for x in jax.tree_util.tree_leaves(vjp)
                    if np.shape(x) == (p.num_chunks, p.config.V, p.K)]
     assert len(slot_shaped) == 1        # the logits — α is NOT stored
     stats_shaped = [x for x in jax.tree_util.tree_leaves(vjp)
-                    if np.shape(x) == (p.n_blocks, p.config.R)]
+                    if np.shape(x) == (p.n_blocks * SUBLANES, LANES)]
     assert len(stats_shaped) == 2       # rowmax + rowsum
     f_eng = make_gat_message_fn(p, backend="engine")
     g_eng = jax.grad(lambda q, k, v: (f_eng(q, k, v) ** 2).sum(),
