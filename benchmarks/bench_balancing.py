@@ -37,4 +37,4 @@ def run():
                  f"cv={cv:.2f};sr={p.split_ratio:.2f};"
                  f"cpu_us={t_cpu*1e6:.0f}")
         winner = "balanced" if res[True] < res[False] else "unbalanced"
-        emit(f"fig1/{g.name}/winner", 0.0, f"{winner};cv={cv:.2f}")
+        emit(f"fig1/{g.name}/winner", 0.0, f"winner={winner};cv={cv:.2f}")

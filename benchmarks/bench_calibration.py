@@ -1,0 +1,113 @@
+"""Priced-vs-measured rank correlation per corpus tier + calibration fit.
+
+The paper's adaptivity claim rests on the label source ranking configs
+the way real hardware does.  This benchmark measures exactly that, per
+corpus tier:
+
+* build the measured design (``calibrate.build_design``: every config of
+  the space timed on the jit'd engine via ``autotune.time_fn``, features
+  priced from the analytic grid extents);
+* fit the cost-model constants on the first tier's design
+  (``calibrate.fit`` — NNLS on relative residuals);
+* record Spearman ρ between priced and measured times **pre**-calibration
+  (hand-set constants) and **post**-calibration (fitted coefficients) —
+  pooled per tier and per graph — plus the fitted coefficients.
+
+Rows land in BENCH_spmm.json via ``run.py --json`` (key
+``calibration``), so every future "X× faster" claim can point at the
+rank correlation of the prices it was selected by.  Tiers after the
+first are scored *out-of-sample* — the fit generalization claim.
+
+Defaults are the CI smoke: small tier, 2 reps, spmm only.  The full
+pass (``--tiers small,skewed,large --reps 3 --ops spmm,sddmm``) is the
+one to run on new hardware — see docs/CALIBRATION.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# per-tier nnz ceiling for the measured subset (CPU wall-clock budget);
+# tiers not listed fall back to the "small" ceiling
+TIER_MAX_NNZ = {"small": 300_000, "skewed": 300_000,
+                "bench": 300_000, "large": 3_000_000}
+
+
+def _tier_rho(samples, cal, spearman):
+    """Pooled + per-graph pre/post Spearman ρ of one tier's design."""
+    y = np.array([s.measured for s in samples])
+    pre = np.array([s.priced for s in samples])
+    post = cal.predict(samples)
+    per_graph = {}
+    for gname in sorted({s.graph for s in samples}):
+        idx = [i for i, s in enumerate(samples) if s.graph == gname]
+        per_graph[gname] = {
+            "rho_pre": spearman(pre[idx], y[idx]),
+            "rho_post": spearman(post[idx], y[idx]),
+            "n": len(idx),
+        }
+    return {"rho_pre": spearman(pre, y), "rho_post": spearman(post, y),
+            "n": len(samples), "per_graph": per_graph}
+
+
+def run(tiers=("small",), reps: int = 2, dims=(32, 64), ops=("spmm",),
+        max_graphs: int = 5, heads: int = 1):
+    from benchmarks.common import emit
+    from repro.core.calibrate import build_design, fit, spearman
+    from repro.data.graphs import corpus
+
+    metrics: dict = {"reps": reps, "dims": list(dims), "ops": list(ops),
+                     "tiers": {}}
+    designs = {}
+    for tier in tiers:
+        ceiling = TIER_MAX_NNZ.get(tier, TIER_MAX_NNZ["small"])
+        graphs = [g for g in corpus(tier) if g.csr.nnz <= ceiling]
+        if len(graphs) > max_graphs:
+            emit(f"calibration/{tier}/subset", 0.0,
+                 f"kept={max_graphs};dropped={len(graphs) - max_graphs}")
+            graphs = graphs[:max_graphs]
+        designs[tier] = build_design(graphs, dims=dims, ops=ops, reps=reps,
+                                     H=heads)
+
+    # fit on the first tier's design; later tiers score out-of-sample
+    fit_tier = tiers[0]
+    cal = fit(designs[fit_tier], meta={"tier": fit_tier, "reps": reps,
+                                       "dims": list(dims),
+                                       "ops": list(ops)})
+    metrics["fit"] = cal.to_dict()
+    for op, c in cal.coef.items():
+        emit(f"calibration/fit/{op}", 0.0,
+             ";".join(f"{k}={v:.4e}" for k, v in c.items())
+             + f";fit_tier={fit_tier}")
+
+    for tier in tiers:
+        tm = _tier_rho(designs[tier], cal, spearman)
+        tm["in_sample"] = tier == fit_tier
+        metrics["tiers"][tier] = tm
+        emit(f"calibration/{tier}/rho", 0.0,
+             f"rho_pre={tm['rho_pre']:.3f};rho_post={tm['rho_post']:.3f};"
+             f"n={tm['n']};in_sample={int(tm['in_sample'])}")
+        for gname, gm in tm["per_graph"].items():
+            emit(f"calibration/{tier}/{gname}", 0.0,
+                 f"rho_pre={gm['rho_pre']:.3f};"
+                 f"rho_post={gm['rho_post']:.3f};n={gm['n']}")
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiers", default="small",
+                    help="comma-separated corpus tiers "
+                    "(small,skewed,bench,large)")
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--dims", default="32,64")
+    ap.add_argument("--ops", default="spmm")
+    ap.add_argument("--max-graphs", type=int, default=5)
+    ap.add_argument("--heads", type=int, default=1)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(tiers=tuple(args.tiers.split(",")), reps=args.reps,
+        dims=tuple(int(d) for d in args.dims.split(",")),
+        ops=tuple(args.ops.split(",")), max_graphs=args.max_graphs,
+        heads=args.heads)

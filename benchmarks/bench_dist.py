@@ -58,6 +58,28 @@ def _overlap_prediction(g_ov) -> dict:
             "predicted_gain": serial / max(hidden, 1e-12)}
 
 
+def overlap_row(name: str, n_parts: int, ov: dict) -> tuple:
+    """The ``(name, us_per_call, derived)`` of the overlap on/off row —
+    the one schema ``tests/test_bench_schema.py`` pins.
+
+    At a single partition there is no halo to hide (every source row is
+    local), so the overlap decomposition only adds a second kernel pass
+    and its dispatch overhead: measuring it records "overlap costs 1.5×"
+    where the feature simply does not apply.  The ``skipped`` annotation
+    replaces that artifact row; real on/off measurements only exist for
+    ``n_parts > 1``.
+    """
+    if ov.get("skipped"):
+        return (f"dist/{name}/p{n_parts}/overlap",
+                ov.get("measured_off_us", ov["overlapped_us"]),
+                f"skipped={ov['skipped']};"
+                f"exchange_us={ov['exchange_us']:.1f}")
+    return (f"dist/{name}/p{n_parts}/overlap", ov["measured_on_us"],
+            f"off_us={ov['measured_off_us']:.1f};"
+            f"predicted_gain={ov['predicted_gain']:.3f};"
+            f"exchange_us={ov['exchange_us']:.1f}")
+
+
 def run(dim: int = 64, parts=(1, 2, 4, 8), heads: int = 1):
     import jax
     import jax.numpy as jnp
@@ -113,13 +135,13 @@ def run(dim: int = 64, parts=(1, 2, 4, 8), heads: int = 1):
             pm["overlap"] = ov
             if measurable:
                 t_off = time_fn(lambda b: dist_spmm(g, b), B, reps=3)
-                t_on = time_fn(lambda b: dist_spmm(g_ov, b), B, reps=3)
                 ov["measured_off_us"] = t_off * 1e6
-                ov["measured_on_us"] = t_on * 1e6
-                emit(f"dist/{name}/p{n_parts}/overlap", t_on * 1e6,
-                     f"off_us={t_off * 1e6:.1f};"
-                     f"predicted_gain={ov['predicted_gain']:.3f};"
-                     f"exchange_us={ov['exchange_us']:.1f}")
+                if n_parts == 1:
+                    ov["skipped"] = "p1_no_halo"
+                else:
+                    t_on = time_fn(lambda b: dist_spmm(g_ov, b), B, reps=3)
+                    ov["measured_on_us"] = t_on * 1e6
+                emit(*overlap_row(name, n_parts, ov))
                 pm["measured_us"] = t_off * 1e6
                 emit(f"dist/{name}/p{n_parts}/measured", t_off * 1e6,
                      f"devices={ndev}")
@@ -129,7 +151,7 @@ def run(dim: int = 64, parts=(1, 2, 4, 8), heads: int = 1):
                      f"serialized_us={ov['serialized_us']:.1f};"
                      f"predicted_gain={ov['predicted_gain']:.3f}")
                 emit(f"dist/{name}/p{n_parts}/predicted_makespan",
-                     adaptive * 1e6, f"needs_{n_parts}_devices")
+                     adaptive * 1e6, f"needs_devices={n_parts}")
 
             # ----------------------------- multi-head distributed GAT
             if heads > 1 and measurable and name == "rmat13":

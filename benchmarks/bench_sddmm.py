@@ -106,4 +106,4 @@ def run():
     t = time_fn(lambda: sddmm_softmax(p, Q, K), reps=3)
     emit("gat_softmax/rmat10/fused_interpret", t * 1e6,
          f"cfg={gat_best.astuple()};nnz={small.nnz};"
-         "one kernel, softmax stats in-epilogue")
+         "note=one_kernel_softmax_stats_in_epilogue")

@@ -67,7 +67,7 @@ def run(decider=None):
     for m, per_dim in agg.items():
         for d, v in per_dim.items():
             emit(f"table4/avg_speedup_vs_cusparse/{m}/dim{d}", 0.0,
-                 f"{np.mean(v):.2f}x")
+                 f"speedup={np.mean(v):.2f}x")
         allv = [x for v in per_dim.values() for x in v]
         emit(f"table4/avg_speedup_vs_cusparse/{m}/all", 0.0,
-             f"{np.mean(allv):.2f}x")
+             f"speedup={np.mean(allv):.2f}x")

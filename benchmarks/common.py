@@ -20,6 +20,52 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+# ------------------------------------------------------- row schema
+# The golden schema every emitted row must satisfy — ``run.py --json``
+# validates before writing BENCH_spmm.json and tests/test_bench_schema.py
+# re-asserts it on the generated artifact, so bench emitters cannot drift.
+
+def parse_derived(derived: str) -> dict:
+    """Parse a row's ``derived`` field: ``;``-separated ``k=v`` entries
+    (empty string → ``{}``).  Raises ``ValueError`` on any entry that is
+    not of that shape — the contract that keeps BENCH_spmm.json
+    machine-readable across benchmark modules."""
+    out: dict = {}
+    if not derived:
+        return out
+    for entry in derived.split(";"):
+        if not entry:
+            continue
+        key, eq, val = entry.partition("=")
+        if not eq or not key:
+            raise ValueError(
+                f"derived entry {entry!r} is not k=v (in {derived!r})")
+        out[key] = val
+    return out
+
+
+def validate_row(row: dict) -> dict:
+    """Assert one JSON row carries exactly ``name``/``us_per_call``/
+    ``derived`` with a non-empty name, a finite non-negative time, and a
+    parseable derived field; returns ``parse_derived(row['derived'])``."""
+    if set(row) != {"name", "us_per_call", "derived"}:
+        raise ValueError(f"row keys {sorted(row)} != "
+                         f"['derived', 'name', 'us_per_call']")
+    if not isinstance(row["name"], str) or not row["name"]:
+        raise ValueError(f"row name {row['name']!r} must be a non-empty str")
+    us = row["us_per_call"]
+    if not isinstance(us, (int, float)) or isinstance(us, bool) \
+            or not np.isfinite(us) or us < 0:
+        raise ValueError(f"{row['name']}: us_per_call {us!r} must be a "
+                         "finite non-negative number")
+    if not isinstance(row["derived"], str):
+        raise ValueError(f"{row['name']}: derived must be a str")
+    try:
+        return parse_derived(row["derived"])
+    except ValueError as e:
+        raise ValueError(f"{row['name']}: {e}") from None
+
+
 @functools.lru_cache(maxsize=4)
 def bench_corpus(scale: str = "bench"):
     return corpus(scale)

@@ -18,13 +18,19 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   spmm   — balanced-vs-uniform chunk schedule     [B-mode extension]
            priced + measured makespan on the
            skewed corpus
+  calibration — priced-vs-measured Spearman ρ     [calibration extension]
+           per corpus tier, pre/post NNLS fit of
+           the cost-model constants
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_spmm.json`` (default path): every emitted CSV row plus the
-fusion AND dist sections' structured metrics (kernel counts,
-elementwise-pass counts, per-config fused/unfused times, per-shard
-configs, overlap on/off timings) — the perf-trajectory artifact CI
-archives from PR 4 on (dist folded in from PR 5).
+fusion/dist/spmm/calibration sections' structured metrics (kernel
+counts, elementwise-pass counts, per-config fused/unfused times,
+per-shard configs, overlap on/off timings, fitted coefficients and
+rank correlations) — the perf-trajectory artifact CI archives from
+PR 4 on (dist folded in from PR 5, calibration from PR 7).  Every row
+is checked against the golden schema (``common.validate_row``) before
+the file is written.
 """
 from __future__ import annotations
 
@@ -43,11 +49,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_balancing, bench_blocking,
-                            bench_coarsening, bench_decider, bench_dist,
-                            bench_fusion, bench_gnn_train, bench_kernel,
-                            bench_reorder, bench_sddmm, bench_speedups,
-                            bench_spmm)
-    from benchmarks.common import ROWS, emit
+                            bench_calibration, bench_coarsening,
+                            bench_decider, bench_dist, bench_fusion,
+                            bench_gnn_train, bench_kernel, bench_reorder,
+                            bench_sddmm, bench_speedups, bench_spmm)
+    from benchmarks.common import ROWS, emit, validate_row
 
     print("name,us_per_call,derived")
     jobs = {
@@ -63,6 +69,7 @@ def main(argv=None):
         "dist": bench_dist.run,
         "fusion": bench_fusion.run,      # returns structured metrics
         "spmm": bench_spmm.run,          # returns structured metrics
+        "calibration": bench_calibration.run,  # returns structured metrics
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None
@@ -75,18 +82,19 @@ def main(argv=None):
             decider = fn()
         elif key == "table4":
             bench_speedups.run(decider)
-        elif key in ("fusion", "dist", "spmm"):   # structured → JSON
+        elif key in ("fusion", "dist", "spmm",
+                     "calibration"):              # structured → JSON
             extras[key] = fn()
         else:
             fn()
         emit(f"{key}/__elapsed", (time.time() - t0) * 1e6, "")
 
     if args.json:
-        payload = {
-            "rows": [{"name": n, "us_per_call": us, "derived": d}
-                     for n, us, d in ROWS],
-            **extras,
-        }
+        rows = [{"name": n, "us_per_call": us, "derived": d}
+                for n, us, d in ROWS]
+        for row in rows:                 # golden schema — fail loud, not
+            validate_row(row)            # after the artifact is archived
+        payload = {"rows": rows, **extras}
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {args.json}", flush=True)

@@ -38,6 +38,9 @@ DOTTED = re.compile(r"`(repro(?:\.\w+)+)")
 # explicit list of dotted symbols the guide must mention by final name
 COVERAGE = {
     "DISTRIBUTED.md": "repro.dist",
+    # the calibration surface (PR 7) — every public symbol of the
+    # fit/gate subsystem must stay documented
+    "CALIBRATION.md": "repro.core.calibrate",
     # the balanced-scheduling + tile-aligned-stats surface (PR 6)
     "OPERATORS.md": [
         "repro.core.balanced_capacity",

@@ -19,10 +19,23 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 python -m compileall -q src
 python scripts/check_imports.py   # every bench_*/example module imports
 python scripts/check_docs.py      # README/docs symbol references resolve
+# calibration smoke: the end-to-end fit CLI on a tiny design (2 graphs,
+# one dim, 2 reps) incl. artifact save/reload — catches a broken fitter
+# or artifact format before the full bench pass below prices with it
+CAL_SMOKE="$(mktemp /tmp/calibration_smoke.XXXXXX.json)"
+python -m repro.core.calibrate --fast --out "$CAL_SMOKE"
+python - "$CAL_SMOKE" <<'EOF'
+import sys
+from repro.core.calibrate import CalibrationResult
+res = CalibrationResult.load(sys.argv[1])
+assert res.coef, "calibration smoke produced no coefficients"
+EOF
+rm -f "$CAL_SMOKE"
 # perf-trajectory artifact: measured kernel/elementwise-pass counts for
 # the fused GNN hot path + fused-vs-unfused pricing, the distributed
-# per-shard config table and overlap on/off column, and the skewed-corpus
-# balanced-vs-uniform schedule smoke (priced + measured makespan) — all
-# in one machine-readable BENCH_spmm.json
-python -m benchmarks.run --only fusion,dist,spmm --json BENCH_spmm.json
+# per-shard config table and overlap on/off column, the skewed-corpus
+# balanced-vs-uniform schedule smoke (priced + measured makespan), and
+# the priced-vs-measured rank correlations (small tier, pre/post fit) —
+# all in one machine-readable, schema-validated BENCH_spmm.json
+python -m benchmarks.run --only fusion,dist,spmm,calibration --json BENCH_spmm.json
 echo "ci: OK"

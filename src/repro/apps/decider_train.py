@@ -40,17 +40,26 @@ class DeciderDataset:
 
 
 def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
-                  op: str = "spmm", H: int = 1,
+                  op: str = "spmm", H: int = 1, calibration=None,
                   verbose=False) -> DeciderDataset:
     """``H`` is the head count the oracle labels are collected for —
     multi-head GAT deciders must be trained on ``H``-aware labels (the
-    optimal F/V/S shifts with the per-head dim), not the H=1 ones."""
+    optimal F/V/S shifts with the per-head dim), not the H=1 ones.
+
+    ``calibration`` (a ``CalibrationResult`` or artifact path) makes the
+    model-mode labels come from the *fitted* cost model — the decider
+    then learns the config ranking this host measurably exhibits instead
+    of the hand-set napkin-math one.  Ignored in measured mode."""
     graphs = graphs if graphs is not None else corpus("bench")
+    if calibration is not None and not hasattr(calibration, "price"):
+        from repro.core.calibrate import CalibrationResult
+        calibration = CalibrationResult.load(calibration)
     samples, times, by_graph = [], {}, {}
     for g in graphs:
         t0 = time.time()
         feats = extract_features(g.csr)
-        cm = CostModel(g.csr) if mode == "model" else None
+        cm = (CostModel(g.csr, calibration=calibration)
+              if mode == "model" else None)
         for dim in dims:
             res = oracle_search(g.csr, dim, mode=mode, cm=cm, op=op, H=H)
             samples.append((feats, dim, res.best_config))
@@ -120,11 +129,15 @@ def main(argv=None):
                     help="head count the oracle labels are collected for "
                     "(multi-head GAT deciders need H-aware labels)")
     ap.add_argument("--scale", default="small",
-                    choices=["small", "bench", "skewed"],
+                    choices=["small", "bench", "skewed", "large"],
                     help="graph corpus")
     ap.add_argument("--dims", default=None,
                     help="comma-separated embedding dims (default: paper "
                     "sweep 16..256)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="calibration artifact (repro.core.calibrate "
+                    "JSON): model-mode labels come from the fitted cost "
+                    "model instead of the hand-set constants")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None,
                     help="pickle the trained decider to this path")
@@ -133,9 +146,11 @@ def main(argv=None):
     dims = (tuple(int(d) for d in args.dims.split(","))
             if args.dims else DIMS)
     ds = build_dataset(corpus(args.scale), dims=dims, mode=args.mode,
-                       op=args.op, H=args.heads, verbose=True)
+                       op=args.op, H=args.heads,
+                       calibration=args.calibration, verbose=True)
     ev = train_eval(ds, seed=args.seed)
     print(f"op={args.op} mode={args.mode} H={args.heads} "
+          f"calibrated={args.calibration is not None} "
           f"graphs={len(ds.graph_names)}")
     for d, (pred, rnd) in ev.per_dim.items():
         print(f"  dim={d:4d}  pred_norm={pred:.3f}  random_norm={rnd:.3f}")

@@ -7,8 +7,10 @@ modules are pulled in eagerly — the JAX-importing layers (``engine``,
 ``autotune``) stay behind explicit submodule imports to keep
 ``import repro.core`` light.
 """
+from .calibrate import (CalibrationResult, CalibrationSample, fit,
+                        fit_columns, spearman)
 from .cost_model import (CostBreakdown, CostModel, kernel_cost, sddmm_cost,
-                         unfused_penalty)
+                         unfused_bytes, unfused_penalty)
 from .features import FEATURE_NAMES, MatrixFeatures, extract_features
 from .pcsr import (PCSR, PCSRStats, SpMMConfig, balanced_capacity,
                    build_pcsr, config_space, pcsr_stats, pcsr_to_coo,
@@ -21,6 +23,8 @@ __all__ = [
     "config_space", "pcsr_stats", "pcsr_to_coo", "slot_transfer_map",
     "transpose_csr", "transpose_pcsr",
     "CostBreakdown", "CostModel", "kernel_cost", "sddmm_cost",
-    "unfused_penalty",
+    "unfused_bytes", "unfused_penalty",
+    "CalibrationResult", "CalibrationSample", "fit", "fit_columns",
+    "spearman",
     "FEATURE_NAMES", "MatrixFeatures", "extract_features",
 ]

@@ -43,7 +43,8 @@ class OracleResult:
 def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
                   reps: int = 3, rng_seed: int = 0,
                   cm: CostModel | None = None,
-                  op: str = "spmm", H: int = 1) -> OracleResult:
+                  op: str = "spmm", H: int = 1,
+                  calibration=None) -> OracleResult:
     """Exhaustive search of ``space`` for operator ``op`` ("spmm",
     "sddmm", or "gat" — the SDDMM+softmax+SpMM attention pair, timed or
     priced as the sum of its two passes).
@@ -55,6 +56,14 @@ def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
     problem.  Model mode prices ``cm.time(..., H=H)``; measured mode
     times the engine on the actual head-tiled steering arrays
     (``PCSR.steering(H)``) with per-head-dim operands.
+
+    ``calibration`` (a ``CalibrationResult`` or a path to a saved
+    artifact) makes model mode price through fitted-to-hardware
+    coefficients instead of the hand-set constants — the label source
+    the decider should be trained on once a host has been calibrated.
+    Ignored when an explicit ``cm`` is passed (build that cost model
+    with the calibration instead) and in measured mode (measured times
+    need no pricing).
     """
     if op not in ("spmm", "sddmm", "gat"):
         raise ValueError(op)
@@ -63,7 +72,11 @@ def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
     space = space or config_space(dim)
     times = {}
     if mode == "model":
-        cm = cm or CostModel(csr)
+        if cm is None:
+            if calibration is not None and not hasattr(calibration, "price"):
+                from .calibrate import CalibrationResult
+                calibration = CalibrationResult.load(calibration)
+            cm = CostModel(csr, calibration=calibration)
         for cfg in space:
             times[cfg] = cm.time(dim, cfg, op, H=H)
     elif mode == "measured":

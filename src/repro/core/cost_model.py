@@ -51,6 +51,12 @@ class CostBreakdown:
     bytes_out: float
     flops: float
     steps: int
+    # per-chunk setup events the grid pays (J·C for the SpMM's dim-tile
+    # revisits, C for the SDDMM) — kept separate from ``t_overhead`` so
+    # the calibration fit (``repro.core.calibrate``) can treat "number of
+    # chunk setups" as its own feature column with a learned coefficient
+    # instead of baking ``CHUNK_SETUP`` in.
+    chunk_setups: int = 0
 
     @property
     def total(self) -> float:
@@ -109,7 +115,7 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
         # prices the balanced schedule's slots-vs-chunks trade
         t_overhead=steps * STEP_OVERHEAD + J * C * CHUNK_SETUP,
         bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
-        flops=flops, steps=steps)
+        flops=flops, steps=steps, chunk_setups=J * C)
 
 
 def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
@@ -150,16 +156,16 @@ def sddmm_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
         # the (C, K, J) grid fetches each chunk's steering/vals once
         t_overhead=steps * STEP_OVERHEAD + C * CHUNK_SETUP,
         bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
-        flops=flops, steps=steps)
+        flops=flops, steps=steps, chunk_setups=C)
 
 
-def unfused_penalty(stats: PCSRStats, dim: int, config: SpMMConfig,
-                    op: str, dtype_bytes: int = DTYPE_BYTES, *,
-                    heads: int = 1) -> float:
-    """Extra seconds the *unfused* pipeline pays vs the fused one — the
-    HBM round-trips of the interstitial elementwise passes the fusion
-    layer eliminates.  This is the "saved bytes" term that lets the
-    decider treat fusion as a config dimension.
+def unfused_bytes(stats: PCSRStats, dim: int, config: SpMMConfig,
+                  op: str, dtype_bytes: int = DTYPE_BYTES, *,
+                  heads: int = 1) -> float:
+    """HBM bytes of the interstitial elementwise passes the fusion layer
+    eliminates — the traffic side of ``unfused_penalty``, split out so a
+    calibrated model can price it with its *fitted* stream rate instead
+    of the hand-set ``HBM_BW``.
 
     op="gat": the softmax-normalize pass between SDDMM and SpMM —
       read logits + gathered row stats, write α, then the SpMM re-reads α
@@ -172,11 +178,23 @@ def unfused_penalty(stats: PCSRStats, dim: int, config: SpMMConfig,
     C, K, slots = stats.chunks_and_slots(config.S, B=config.B)
     if op == "gat":
         slot_bytes = heads * C * config.V * K * dtype_bytes
-        return 3.0 * slot_bytes / HBM_BW
+        return 3.0 * slot_bytes
     if op == "spmm":
         out_bytes = heads * stats.n_rows * _head_dim(dim, heads) * dtype_bytes
-        return 2.0 * out_bytes / HBM_BW
+        return 2.0 * out_bytes
     raise ValueError(f"no fusion penalty for op={op!r}")
+
+
+def unfused_penalty(stats: PCSRStats, dim: int, config: SpMMConfig,
+                    op: str, dtype_bytes: int = DTYPE_BYTES, *,
+                    heads: int = 1) -> float:
+    """Extra seconds the *unfused* pipeline pays vs the fused one — the
+    HBM round-trips of ``unfused_bytes`` at the analytic bandwidth.  This
+    is the "saved bytes" term that lets the decider treat fusion as a
+    config dimension.
+    """
+    return unfused_bytes(stats, dim, config, op, dtype_bytes,
+                         heads=heads) / HBM_BW
 
 
 class CostModel:
@@ -194,11 +212,31 @@ class CostModel:
     ``fused=False`` adds the interstitial elementwise passes the fusion
     layer removes (``unfused_penalty``), so fused-vs-unfused is a priced
     dimension of the search space, not an assumption.
+
+    ``calibration`` (a ``repro.core.calibrate.CalibrationResult`` — load
+    one with ``CostModel.from_calibration``) replaces the hand-set
+    constants with coefficients *fitted to measured wall-clock* on this
+    host: ``time()`` then prices the same exact grid extents
+    (bytes / MACs / steps / chunk setups from ``cost()``) through the
+    fitted linear model, so ``best`` — and everything downstream of it:
+    the decider's labels, the per-shard distributed config picker, the
+    balanced-schedule selection — ranks configs the way this hardware
+    measurably does rather than the way the napkin math assumes.
     """
 
-    def __init__(self, csr: CSRMatrix):
+    def __init__(self, csr: CSRMatrix, calibration=None):
         self.csr = csr
+        self.calibration = calibration
         self._stats: dict[tuple[int, int], PCSRStats] = {}
+
+    @classmethod
+    def from_calibration(cls, csr: CSRMatrix, path) -> "CostModel":
+        """Cost model priced by a saved calibration artifact (a JSON path
+        or an already-loaded ``CalibrationResult``)."""
+        from .calibrate import CalibrationResult
+        cal = (path if isinstance(path, CalibrationResult)
+               else CalibrationResult.load(path))
+        return cls(csr, calibration=cal)
 
     def stats(self, V: int, W: int) -> PCSRStats:
         key = (V, W)
@@ -225,15 +263,27 @@ class CostModel:
         and the interstitial-pass penalty is added — the two sides of the
         comparison ``fusion_savings`` takes."""
         if op == "gat":
-            t = (self.cost(dim, config, "sddmm", H=H).total
-                 + self.cost(dim, config, "spmm", H=H).total)
+            t = (self._price(self.cost(dim, config, "sddmm", H=H), "sddmm")
+                 + self._price(self.cost(dim, config, "spmm", H=H), "spmm"))
         else:
-            t = self.cost(dim, config, op, H=H,
-                          epilogue=epilogue and fused).total
+            t = self._price(self.cost(dim, config, op, H=H,
+                                      epilogue=epilogue and fused), op)
         if not fused and op in ("gat", "spmm"):
-            t += unfused_penalty(self.stats(config.V, config.W), dim,
-                                 config, op, heads=H)
+            st = self.stats(config.V, config.W)
+            if self.calibration is None:
+                t += unfused_penalty(st, dim, config, op, heads=H)
+            else:
+                t += self.calibration.stream_seconds(
+                    unfused_bytes(st, dim, config, op, heads=H))
         return t
+
+    def _price(self, bd: CostBreakdown, op: str) -> float:
+        """Seconds for one kernel pass: the analytic roofline total, or —
+        when calibrated — the fitted linear model over the same grid
+        extents (``calibrate.breakdown_features``)."""
+        if self.calibration is None:
+            return bd.total
+        return self.calibration.price(bd, op)
 
     def fusion_savings(self, dim: int, config: SpMMConfig,
                        op: str = "gat", *, H: int = 1) -> float:

@@ -165,11 +165,31 @@ def corpus(scale: str = "small") -> list[GraphSpec]:
     degree-skew stressors (high-CV power-law / co-citation graphs, where
     the balanced ``B`` chunk schedule should win) plus uniform-degree
     controls (where it should NOT be selected) — the corpus behind
-    ``benchmarks/bench_spmm.py`` and the balanced-scheduling tests."""
+    ``benchmarks/bench_spmm.py`` and the balanced-scheduling tests;
+    ``large`` ≈ the calibration / adaptivity-at-scale tier (bigger
+    rmat/ba/sbm plus ``clones`` skew): graphs big enough that config
+    choice moves wall-clock by integer factors, so priced-vs-measured
+    rank correlation on it is a meaningful claim — opt-in only (never
+    generated in tier-1 CI)."""
     out = []
 
     def add(name, family, g):
         out.append(GraphSpec(name, g, family))
+
+    if scale == "large":
+        add("rmat16", "powerlaw", rmat(16, 8, seed=21))
+        add("rmat17", "powerlaw", rmat(17, 6, seed=22))
+        add("rmat16_sh", "powerlaw", rmat(16, 8, seed=21, shuffle=True))
+        add("ba100k", "powerlaw", ba(100_000, 4, seed=23))
+        add("sbm64x1k", "community", sbm(64, 1024, 0.02, 1.0, seed=24))
+        add("sbm128x512", "community", sbm(128, 512, 0.04, 1.0, seed=25))
+        add("clones50k", "cocitation", clones(50_000, 10, seed=26))
+        add("clones25k_sh", "cocitation",
+            clones(25_000, 12, seed=27, shuffle=True))
+        add("er250k", "uniform", er(250_000, 6, seed=28))
+        add("kreg150k", "uniform", kregular(150_000, 6, seed=29))
+        add("grid512", "mesh", grid2d(512, seed=30))
+        return out
 
     if scale == "skewed":
         add("rmat11", "powerlaw", rmat(11, 8, seed=11))

@@ -130,6 +130,10 @@ class DistGraph:
     n_parts : int
         Number of row shards (= mesh devices on first call).
     strategy : ``"balanced"`` (equal-nnz boundaries) or ``"contiguous"``.
+    calibration : optional ``repro.core.calibrate.CalibrationResult`` (or
+        artifact path) — the per-shard ``CostModel.best`` selection then
+        prices through coefficients fitted to measured kernel time on
+        this host instead of the hand-set analytic constants.
     heads : int
         Head count the cost model prices the configs for
         (``CostModel.best(..., H=heads)``): head tiling multiplies the
@@ -157,6 +161,7 @@ class DistGraph:
                  strategy: str = "balanced",
                  configs=None,
                  decider=None,
+                 calibration=None,
                  mesh=None,
                  backend: str = "engine",
                  interpret: bool = True,
@@ -175,6 +180,14 @@ class DistGraph:
         self._mesh = mesh                  # resolved lazily: the host-side
         # plan (partition, configs, packing) needs no devices at all
 
+        # per-shard selection prices through a calibration artifact when
+        # one is given (path or CalibrationResult) — the per-shard
+        # adaptivity claim is only honest under fitted-to-hardware prices
+        if calibration is not None and not hasattr(calibration, "price"):
+            from repro.core.calibrate import CalibrationResult
+            calibration = CalibrationResult.load(calibration)
+        self.calibration = calibration
+
         space = config_space(dim, max_f)
         self.predicted_times: list = []
         if configs is None:
@@ -184,8 +197,8 @@ class DistGraph:
             else:
                 self.configs = []
                 for s in self.part.shards:
-                    cfg, t = CostModel(s.csr).best(dim, space, op=op,
-                                                   H=heads)
+                    cfg, t = CostModel(s.csr, calibration=calibration).best(
+                        dim, space, op=op, H=heads)
                     self.configs.append(cfg)
                     self.predicted_times.append(t)
         elif isinstance(configs, SpMMConfig):
@@ -217,8 +230,10 @@ class DistGraph:
                     lc = decider.predict(extract_features(loc), dim)
                     hc = decider.predict(extract_features(hal), dim)
                 else:
-                    lc, _ = CostModel(loc).best(dim, space, H=heads)
-                    hc, _ = CostModel(hal).best(dim, space, H=heads)
+                    lc, _ = CostModel(loc, calibration=calibration).best(
+                        dim, space, H=heads)
+                    hc, _ = CostModel(hal, calibration=calibration).best(
+                        dim, space, H=heads)
                 self.overlap_configs.append((lc, hc))
                 loc_pcsrs.append(build_pcsr(loc.indptr, loc.indices,
                                             loc.data, loc.n_rows,

@@ -1,0 +1,125 @@
+"""Golden schema of the BENCH_spmm.json perf artifact.
+
+Every emitted row must carry exactly ``name``/``us_per_call``/``derived``
+with a machine-parseable ``;``-separated ``k=v`` derived field —
+``run.py --json`` validates before writing, this file pins the contract
+(and re-validates the ci.sh-generated artifact when one is present —
+it is gitignored, so the artifact tests skip on a fresh checkout) so
+bench emitters cannot drift back to free-text derived strings.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from benchmarks.common import parse_derived, validate_row
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------- parse_derived
+def test_parse_derived_happy_path():
+    assert parse_derived("") == {}
+    assert parse_derived("a=1") == {"a": "1"}
+    assert parse_derived("a=1;b=x2;cv=0.50") == {
+        "a": "1", "b": "x2", "cv": "0.50"}
+    # values may themselves contain '=' (partition splits on the first)
+    assert parse_derived("eq=a=b") == {"eq": "a=b"}
+    # trailing separator tolerated
+    assert parse_derived("a=1;") == {"a": "1"}
+
+
+@pytest.mark.parametrize("bad", ["free text", "a=1;notkv", "=v", "a=1;=2"])
+def test_parse_derived_rejects_non_kv(bad):
+    with pytest.raises(ValueError):
+        parse_derived(bad)
+
+
+# ----------------------------------------------------------- validate_row
+def _row(**kw):
+    base = {"name": "x/y", "us_per_call": 1.5, "derived": "k=v"}
+    base.update(kw)
+    return base
+
+
+def test_validate_row_accepts_golden_row():
+    assert validate_row(_row()) == {"k": "v"}
+    assert validate_row(_row(derived="")) == {}
+    assert validate_row(_row(us_per_call=0)) == {"k": "v"}
+
+
+@pytest.mark.parametrize("bad", [
+    _row(name=""),
+    _row(name=3),
+    _row(us_per_call="1.5"),
+    _row(us_per_call=True),
+    _row(us_per_call=float("nan")),
+    _row(us_per_call=float("inf")),
+    _row(us_per_call=-1.0),
+    _row(derived=None),
+    _row(derived="free text"),
+    {"name": "x", "us_per_call": 1.0},                       # missing key
+    _row(extra=1),                                           # extra key
+])
+def test_validate_row_rejects(bad):
+    with pytest.raises(ValueError):
+        validate_row(bad)
+
+
+# ------------------------------------------------- bench_dist overlap row
+def test_overlap_row_p1_is_annotated_not_measured():
+    """At P=1 there is no halo: the row must carry the skip annotation
+    (and the off-schedule time), never an on-vs-off 'overlap costs 1.5x'
+    artifact — the schema regression this file exists for."""
+    from benchmarks.bench_dist import overlap_row
+
+    ov = {"skipped": "p1_no_halo", "measured_off_us": 19882.9,
+          "overlapped_us": 21000.0, "exchange_us": 0.0}
+    name, us, derived = overlap_row("rmat13", 1, ov)
+    assert name == "dist/rmat13/p1/overlap"
+    assert us == pytest.approx(19882.9)
+    d = validate_row({"name": name, "us_per_call": us, "derived": derived})
+    assert d["skipped"] == "p1_no_halo"
+    assert "off_us" not in d          # no fake on/off comparison at P=1
+
+
+def test_overlap_row_multi_partition_is_measured():
+    from benchmarks.bench_dist import overlap_row
+
+    ov = {"measured_on_us": 90.0, "measured_off_us": 120.0,
+          "predicted_gain": 1.25, "exchange_us": 10.0,
+          "overlapped_us": 95.0}
+    name, us, derived = overlap_row("er8k", 4, ov)
+    assert name == "dist/er8k/p4/overlap"
+    assert us == pytest.approx(90.0)
+    d = validate_row({"name": name, "us_per_call": us, "derived": derived})
+    assert float(d["off_us"]) == pytest.approx(120.0)
+    assert float(d["predicted_gain"]) == pytest.approx(1.25)
+    assert "skipped" not in d
+
+
+# ------------------------------------------------ the generated artifact
+def test_bench_artifact_satisfies_schema():
+    path = REPO / "BENCH_spmm.json"
+    if not path.exists():                              # pragma: no cover
+        pytest.skip("no BENCH_spmm.json generated yet (run scripts/ci.sh)")
+    payload = json.loads(path.read_text())
+    assert "rows" in payload and payload["rows"]
+    for row in payload["rows"]:
+        validate_row(row)
+
+
+def test_bench_artifact_has_no_p1_overlap_artifact():
+    """The p1 overlap row, if present, must be the annotated skip — the
+    19882.9 µs vs 30487 µs 'overlap hurts' artifact stays dead."""
+    path = REPO / "BENCH_spmm.json"
+    if not path.exists():                              # pragma: no cover
+        pytest.skip("no BENCH_spmm.json generated yet (run scripts/ci.sh)")
+    payload = json.loads(path.read_text())
+    for row in payload["rows"]:
+        if row["name"].endswith("/p1/overlap"):
+            d = parse_derived(row["derived"])
+            assert d.get("skipped") == "p1_no_halo", row
+            assert "off_us" not in d, row

@@ -1,0 +1,200 @@
+"""Calibration subsystem: NNLS fitter, artifact round-trip, and the
+rank-correlation / regret gates every speed claim now rides on.
+
+The measured gates (``@pytest.mark.measured``) time the jit'd engine on
+the pinned ``calibrate.gate_design`` subset — in tier-1 by default,
+deselectable on loaded machines with ``pytest -m "not measured"``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.calibrate import (COLUMNS, GATE_DIMS, GATE_GRAPHS,
+                                  GATE_REPS, CalibrationResult,
+                                  CalibrationSample, breakdown_features,
+                                  fit, fit_columns, gate_design, nnls,
+                                  reference_coefficients, spearman)
+from repro.core.cost_model import HBM_BW, CostModel
+from repro.core.pcsr import config_space
+from repro.data.graphs import corpus, er
+
+
+# ------------------------------------------------------------- the fitter
+def _log_uniform_design(rng, n=240, noise=0.02):
+    """Well-conditioned synthetic design: independent log-uniform columns
+    spanning each feature's realistic range.  (The real spmm design is
+    structurally collinear — bytes_gather = steps·dblk·4 — so coefficient
+    *recovery* is asserted here; rank quality on the real design is the
+    measured gate below.)"""
+    X = np.stack([
+        np.ones(n),
+        10 ** rng.uniform(3, 8, n),     # bytes
+        10 ** rng.uniform(4, 9, n),     # flops
+        10 ** rng.uniform(1, 6, n),     # steps
+        10 ** rng.uniform(0, 4, n),     # chunk setups
+    ], axis=1)
+    true = np.array([2e-5, 1 / 80e9, 1 / 5e10, 3e-7, 1e-6])
+    y = X @ true * (1.0 + noise * rng.standard_normal(n))
+    return X, y, true
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fit_recovers_synthetic_constants(seed):
+    """ISSUE acceptance: ≤10% relative error on every constant at 2%
+    measurement noise."""
+    X, y, true = _log_uniform_design(np.random.default_rng(seed))
+    coef = fit_columns(X, y)
+    rel = np.abs(coef - true) / true
+    assert rel.max() <= 0.10, f"rel errors {dict(zip(COLUMNS, rel))}"
+
+
+def test_nnls_matches_lstsq_when_interior():
+    rng = np.random.default_rng(0)
+    A = rng.random((30, 4)) + 0.1
+    x_true = np.array([1.0, 2.0, 0.5, 3.0])
+    b = A @ x_true
+    assert np.allclose(nnls(A, b), x_true, atol=1e-8)
+
+
+def test_nnls_clamps_negative_coordinates():
+    A = np.array([[1.0, 0.0], [0.0, 1.0]])
+    b = np.array([2.0, -1.0])
+    x = nnls(A, b)
+    assert np.allclose(x, [2.0, 0.0])
+    assert (x >= 0).all()
+
+
+def test_spearman_known_values():
+    assert spearman([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3, 4], [4, 3, 2, 1]) == pytest.approx(-1.0)
+    # average-rank tie handling (scipy's value for this triple)
+    assert spearman([1, 1, 2], [1, 2, 3]) == pytest.approx(
+        np.sqrt(3) / 2)
+    assert spearman([5, 5, 5], [1, 2, 3]) == 0.0
+
+
+def test_reference_coefficients_price_like_analytic_model():
+    """features · reference_coefficients == the analytic max-free part of
+    the price — the 'pre-calibration' point is the hand-set model (up to
+    the max(mem, compute) vs mem+compute difference, so ≥)."""
+    csr = er(512, 4, seed=3)
+    cm = CostModel(csr)
+    ref = np.array([reference_coefficients()[c] for c in COLUMNS])
+    for cfg in config_space(32)[:4]:
+        bd = cm.cost(32, cfg)
+        linear = float(breakdown_features(bd) @ ref)
+        assert linear >= bd.total - 1e-12
+
+
+# ------------------------------------------------------------- artifact
+def _toy_samples(rng, ops=("spmm", "sddmm")):
+    samples = []
+    for op in ops:
+        true = np.array([1e-5, 1 / 100e9, 1 / 1e11, 2e-7, 5e-7])
+        if op == "sddmm":
+            true = true * 2.0
+        for _ in range(40):
+            f = np.array([1.0, 10 ** rng.uniform(4, 8),
+                          10 ** rng.uniform(5, 9),
+                          10 ** rng.uniform(2, 6),
+                          10 ** rng.uniform(1, 4)])
+            t = float(f @ true)
+            samples.append(CalibrationSample(
+                "toy", op, 32, (1, 1, 1, False, False), f, t, t))
+    return samples
+
+
+def test_save_load_from_calibration_round_trip(tmp_path):
+    """ISSUE acceptance: save → load → from_calibration round-trips
+    bit-exact."""
+    res = fit(_toy_samples(np.random.default_rng(0)),
+              meta={"host": "test"})
+    p1, p2 = tmp_path / "cal.json", tmp_path / "cal2.json"
+    res.save(p1)
+    res2 = CalibrationResult.load(p1)
+    assert res2.to_dict() == res.to_dict()
+    res2.save(p2)
+    assert p1.read_bytes() == p2.read_bytes()    # byte-stable artifact
+
+    csr = er(512, 4, seed=3)
+    cm_mem = CostModel(csr, calibration=res)
+    cm_file = CostModel.from_calibration(csr, p1)
+    for cfg in config_space(32):
+        assert cm_file.time(32, cfg) == cm_mem.time(32, cfg)
+        assert cm_file.time(32, cfg, "sddmm") == cm_mem.time(
+            32, cfg, "sddmm")
+
+
+def test_artifact_column_mismatch_rejected():
+    with pytest.raises(ValueError, match="columns"):
+        CalibrationResult.from_dict(
+            {"columns": ["const", "bytes"], "coef": {}})
+
+
+def test_missing_op_falls_back_to_spmm():
+    res = fit(_toy_samples(np.random.default_rng(1), ops=("spmm",)))
+    assert np.array_equal(res.coefficients("gat"), res.coefficients("spmm"))
+
+
+def test_stream_seconds_falls_back_to_analytic_bandwidth():
+    res = CalibrationResult(coef={"spmm": dict(zip(
+        COLUMNS, [1e-6, 0.0, 1e-12, 1e-7, 1e-7]))})
+    assert res.stream_seconds(HBM_BW) == pytest.approx(1.0)
+    res2 = CalibrationResult(coef={"spmm": dict(zip(
+        COLUMNS, [1e-6, 2.0 / HBM_BW, 1e-12, 1e-7, 1e-7]))})
+    assert res2.stream_seconds(HBM_BW) == pytest.approx(2.0)
+
+
+# ----------------------------------------------- measured regression gates
+@pytest.fixture(scope="module")
+def gate():
+    """One measured pass over the pinned gate design (GATE_GRAPHS ×
+    GATE_DIMS × full config space, seeded, GATE_REPS reps) + its fit —
+    shared by the rank gate and the regret gate."""
+    samples = gate_design(reps=GATE_REPS)
+    cal = fit(samples, meta={"design": "gate", "reps": GATE_REPS})
+    return samples, cal
+
+
+@pytest.mark.measured
+def test_rank_correlation_gate(gate):
+    """ISSUE acceptance: pooled priced-vs-measured Spearman ρ ≥ 0.5
+    before calibration and ≥ 0.8 after, on the pinned small-corpus
+    subset."""
+    samples, cal = gate
+    y = np.array([s.measured for s in samples])
+    rho_pre = spearman(np.array([s.priced for s in samples]), y)
+    rho_post = spearman(cal.predict(samples), y)
+    assert rho_pre >= 0.5, f"pre-calibration rho {rho_pre:.3f} < 0.5"
+    assert rho_post >= 0.8, f"post-calibration rho {rho_post:.3f} < 0.8"
+    assert rho_post > rho_pre    # calibration must not make ranking worse
+
+
+@pytest.mark.measured
+def test_calibrated_best_regret(gate):
+    """ISSUE acceptance: the calibrated ``CostModel.best`` pick is never
+    >1.5× the measured-best config on any (graph, dim) of the gate
+    design."""
+    samples, cal = gate
+    by_cell: dict = {}
+    for s in samples:
+        by_cell.setdefault((s.graph, s.dim), {})[s.config] = s.measured
+    specs = {g.name: g for g in corpus("small")}
+    for (gname, dim), times in by_cell.items():
+        cm = CostModel(specs[gname].csr, calibration=cal)
+        cfg, _ = cm.best(dim, config_space(dim))
+        regret = times[cfg.astuple()] / min(times.values())
+        assert regret <= 1.5, (
+            f"{gname} dim={dim}: calibrated pick {cfg.astuple()} is "
+            f"{regret:.2f}x the measured best")
+
+
+def test_gate_design_is_pinned():
+    """The regression gate only means something if its design cannot
+    drift: graphs, dims, and reps are module constants."""
+    assert GATE_GRAPHS == ("rmat10", "er1k", "ba1k")
+    assert GATE_DIMS == (32, 64)
+    assert GATE_REPS == 3
+    names = {g.name for g in corpus("small")}
+    assert set(GATE_GRAPHS) <= names
