@@ -14,6 +14,10 @@ DECIDER_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "experiments", "decider.pkl")
 
 
+CALIBRATION_PATH = os.path.join(os.path.dirname(__file__), "..", "configs",
+                                "calibration_cpu_host.json")
+
+
 def run(save=True):
     ds = build_dataset(bench_corpus(), dims=DIMS)
     ev = train_eval(ds)
@@ -26,3 +30,41 @@ def run(save=True):
         os.makedirs(os.path.dirname(DECIDER_PATH), exist_ok=True)
         ev.decider.save(DECIDER_PATH)
     return ev.decider
+
+
+def run_calibrated(scale: str = "small", dims=(32, 64, 128),
+                   calibration=None, seed: int = 0) -> dict:
+    """Retrain the decider on *calibrated* labels (the fitted-to-host
+    cost model, ``decider_train --calibration``) and record the
+    decider-vs-oracle quality that makes adaptivity claims observable:
+    **agreement** (how often the predicted config prices at the
+    calibrated oracle's best time — price ties count as agreement)
+    and **regret** (t_pred/t_best when it does not).
+    Emits ``decider/...`` rows and returns the structured metrics dict
+    ``run.py --json`` folds into BENCH_spmm.json as the ``decider``
+    extras section."""
+    from repro.data.graphs import corpus
+
+    path = calibration or CALIBRATION_PATH
+    ds = build_dataset(corpus(scale), dims=dims, calibration=path)
+    ev = train_eval(ds, seed=seed)
+    for dim, q in sorted(ev.per_dim_quality.items()):
+        emit(f"decider/dim{dim}", 0.0,
+             f"agreement={q['agreement']:.3f};"
+             f"mean_regret={q['mean_regret']:.3f};"
+             f"pred_norm={ev.per_dim[dim][0]:.3f}")
+    emit("decider/overall", 0.0,
+         f"agreement={ev.agreement:.3f};mean_regret={ev.mean_regret:.3f};"
+         f"max_regret={ev.max_regret:.3f};"
+         f"calibration={os.path.basename(path)}")
+    return {
+        "calibration": os.path.basename(path),
+        "scale": scale, "dims": list(dims),
+        "agreement": ev.agreement,
+        "mean_regret": ev.mean_regret,
+        "max_regret": ev.max_regret,
+        "overall_pred_norm": ev.overall_pred,
+        "overall_rnd_norm": ev.overall_rnd,
+        "per_dim": {str(d): dict(q, pred_norm=ev.per_dim[d][0])
+                    for d, q in sorted(ev.per_dim_quality.items())},
+    }

@@ -66,12 +66,13 @@ def overlap_row(name: str, n_parts: int, ov: dict) -> tuple:
     local), so the overlap decomposition only adds a second kernel pass
     and its dispatch overhead: measuring it records "overlap costs 1.5×"
     where the feature simply does not apply.  The ``skipped`` annotation
-    replaces that artifact row; real on/off measurements only exist for
-    ``n_parts > 1``.
+    replaces that artifact row — with ``us_per_call=None``: a skipped
+    row must not carry ANY timing (an off-schedule time next to
+    ``skipped`` reads as a measured overlap time downstream); real
+    on/off measurements only exist for ``n_parts > 1``.
     """
     if ov.get("skipped"):
-        return (f"dist/{name}/p{n_parts}/overlap",
-                ov.get("measured_off_us", ov["overlapped_us"]),
+        return (f"dist/{name}/p{n_parts}/overlap", None,
                 f"skipped={ov['skipped']};"
                 f"exchange_us={ov['exchange_us']:.1f}")
     return (f"dist/{name}/p{n_parts}/overlap", ov["measured_on_us"],

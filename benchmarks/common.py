@@ -15,9 +15,12 @@ from repro.data.graphs import corpus
 ROWS: list[tuple] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float | None, derived: str = ""):
+    """``us_per_call=None`` marks a row with no timing (a skipped
+    measurement — the derived field must say why via ``skipped=...``)."""
     ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    print(f"{name},{us},{derived}", flush=True)
 
 
 # ------------------------------------------------------- row schema
@@ -47,23 +50,36 @@ def parse_derived(derived: str) -> dict:
 def validate_row(row: dict) -> dict:
     """Assert one JSON row carries exactly ``name``/``us_per_call``/
     ``derived`` with a non-empty name, a finite non-negative time, and a
-    parseable derived field; returns ``parse_derived(row['derived'])``."""
+    parseable derived field; returns ``parse_derived(row['derived'])``.
+
+    Skipped rows (``skipped=...`` in derived) must carry
+    ``us_per_call=None`` — and only they may: a timing next to a skip
+    annotation reads as a measurement of the skipped thing downstream."""
     if set(row) != {"name", "us_per_call", "derived"}:
         raise ValueError(f"row keys {sorted(row)} != "
                          f"['derived', 'name', 'us_per_call']")
     if not isinstance(row["name"], str) or not row["name"]:
         raise ValueError(f"row name {row['name']!r} must be a non-empty str")
-    us = row["us_per_call"]
-    if not isinstance(us, (int, float)) or isinstance(us, bool) \
-            or not np.isfinite(us) or us < 0:
-        raise ValueError(f"{row['name']}: us_per_call {us!r} must be a "
-                         "finite non-negative number")
     if not isinstance(row["derived"], str):
         raise ValueError(f"{row['name']}: derived must be a str")
     try:
-        return parse_derived(row["derived"])
+        parsed = parse_derived(row["derived"])
     except ValueError as e:
         raise ValueError(f"{row['name']}: {e}") from None
+    us = row["us_per_call"]
+    if "skipped" in parsed:
+        if us is not None:
+            raise ValueError(
+                f"{row['name']}: skipped row must carry us_per_call=None, "
+                f"not {us!r} (skipped={parsed['skipped']})")
+    elif us is None:
+        raise ValueError(f"{row['name']}: us_per_call=None is only legal "
+                         "on skipped rows (derived skipped=...)")
+    elif not isinstance(us, (int, float)) or isinstance(us, bool) \
+            or not np.isfinite(us) or us < 0:
+        raise ValueError(f"{row['name']}: us_per_call {us!r} must be a "
+                         "finite non-negative number")
+    return parsed
 
 
 @functools.lru_cache(maxsize=4)
@@ -94,20 +110,14 @@ def gflops(csr, dim, seconds):
 def count_pallas_calls(fn):
     """Run ``fn`` with the Pallas dispatch intercepted; return the kernel
     names in launch order (trace-time count == launch count per call).
-    The ONE shared counter — `tests/test_fusion.py` asserts on it and
-    `bench_fusion` records it into BENCH_spmm.json, so the two can never
-    disagree about what counts as a kernel launch."""
-    from jax.experimental import pallas as pl
-    calls = []
-    orig = pl.pallas_call
+    The ONE shared counter — `tests/test_fusion.py` asserts on it,
+    `bench_fusion` records it into BENCH_spmm.json, and the obs layer's
+    tracing probe feeds ``pallas_calls_total`` through the same
+    ``repro.obs.metrics.intercept_pallas`` hook, so none of the three
+    can disagree about what counts as a kernel launch."""
+    from repro.obs.metrics import intercept_pallas
 
-    def counting(*a, **kw):
-        calls.append(kw.get("name", "?"))
-        return orig(*a, **kw)
-
-    pl.pallas_call = counting
-    try:
+    calls: list[str] = []
+    with intercept_pallas(calls.append):
         jax.block_until_ready(fn())
-    finally:
-        pl.pallas_call = orig
     return calls

@@ -21,20 +21,30 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   calibration — priced-vs-measured Spearman ρ     [calibration extension]
            per corpus tier, pre/post NNLS fit of
            the cost-model constants
+  decider — decider retrained on calibrated       [observability extension]
+           labels: decider-vs-oracle agreement
+           + regret on held-out graphs
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_spmm.json`` (default path): every emitted CSV row plus the
-fusion/dist/spmm/calibration sections' structured metrics (kernel
-counts, elementwise-pass counts, per-config fused/unfused times,
-per-shard configs, overlap on/off timings, fitted coefficients and
-rank correlations) — the perf-trajectory artifact CI archives from
-PR 4 on (dist folded in from PR 5, calibration from PR 7).  Every row
-is checked against the golden schema (``common.validate_row``) before
-the file is written.
+fusion/dist/spmm/calibration/decider sections' structured metrics
+(kernel counts, elementwise-pass counts, per-config fused/unfused
+times, per-shard configs, overlap on/off timings, fitted coefficients
+and rank correlations, decider agreement/regret) — the perf-trajectory
+artifact CI archives from PR 4 on (dist folded in from PR 5,
+calibration from PR 7, decider from PR 8).  Every row is checked
+against the golden schema (``common.validate_row``) before the file is
+written.
+
+``--trace [PATH]`` runs the whole sweep under ``repro.obs`` tracing:
+one span per benchmark job, the full pack/decision instrumentation
+underneath, exported as Chrome-trace JSON; with ``--json`` the trace
+path is recorded in the payload next to the rows.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -46,6 +56,10 @@ def main(argv=None):
     ap.add_argument("--json", nargs="?", const="BENCH_spmm.json",
                     default=None, metavar="PATH",
                     help="write BENCH_spmm.json (rows + fusion metrics)")
+    ap.add_argument("--trace", nargs="?", const="BENCH_trace.json",
+                    default=None, metavar="PATH",
+                    help="write a repro.obs Chrome-trace JSON of the "
+                    "sweep (read with repro.apps.obs_report / Perfetto)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_balancing, bench_blocking,
@@ -70,24 +84,31 @@ def main(argv=None):
         "fusion": bench_fusion.run,      # returns structured metrics
         "spmm": bench_spmm.run,          # returns structured metrics
         "calibration": bench_calibration.run,  # returns structured metrics
+        "decider": bench_decider.run_calibrated,  # returns structured
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None
     extras = {}
-    for key, fn in jobs.items():
-        if key not in only:
-            continue
-        t0 = time.time()
-        if key == "table5":
-            decider = fn()
-        elif key == "table4":
-            bench_speedups.run(decider)
-        elif key in ("fusion", "dist", "spmm",
-                     "calibration"):              # structured → JSON
-            extras[key] = fn()
-        else:
-            fn()
-        emit(f"{key}/__elapsed", (time.time() - t0) * 1e6, "")
+    from repro.obs import span, tracing
+    ctx = tracing(args.trace) if args.trace else contextlib.nullcontext()
+    with ctx:
+        for key, fn in jobs.items():
+            if key not in only:
+                continue
+            t0 = time.time()
+            with span(f"bench.{key}"):
+                if key == "table5":
+                    decider = fn()
+                elif key == "table4":
+                    bench_speedups.run(decider)
+                elif key in ("fusion", "dist", "spmm", "calibration",
+                             "decider"):          # structured → JSON
+                    extras[key] = fn()
+                else:
+                    fn()
+            emit(f"{key}/__elapsed", (time.time() - t0) * 1e6, "")
+    if args.trace:
+        print(f"# wrote {args.trace}", flush=True)
 
     if args.json:
         rows = [{"name": n, "us_per_call": us, "derived": d}
@@ -95,6 +116,8 @@ def main(argv=None):
         for row in rows:                 # golden schema — fail loud, not
             validate_row(row)            # after the artifact is archived
         payload = {"rows": rows, **extras}
+        if args.trace:
+            payload["trace"] = args.trace   # the run's telemetry artifact
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {args.json}", flush=True)

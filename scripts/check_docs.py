@@ -38,6 +38,8 @@ DOTTED = re.compile(r"`(repro(?:\.\w+)+)")
 # explicit list of dotted symbols the guide must mention by final name
 COVERAGE = {
     "DISTRIBUTED.md": "repro.dist",
+    # the telemetry surface (PR 8) — spans/metrics/decision log/drift
+    "OBSERVABILITY.md": "repro.obs",
     # the calibration surface (PR 7) — every public symbol of the
     # fit/gate subsystem must stay documented
     "CALIBRATION.md": "repro.core.calibrate",

@@ -31,11 +31,37 @@ res = CalibrationResult.load(sys.argv[1])
 assert res.coef, "calibration smoke produced no coefficients"
 EOF
 rm -f "$CAL_SMOKE"
+# obs smoke: a traced short training run must produce a Chrome-trace
+# JSON the reader CLI can summarize — the acceptance path of the
+# telemetry layer (spans + pack-cache counters + a logged decision)
+OBS_TRACE="$(mktemp /tmp/obs_smoke.XXXXXX.json)"
+python -m repro.apps.gnn --steps 2 --layers 2 --hidden 16 --trace "$OBS_TRACE" > /dev/null
+python -m repro.apps.obs_report "$OBS_TRACE" --top 5
+python - "$OBS_TRACE" <<'EOF'
+import json, sys
+t = json.load(open(sys.argv[1]))
+names = {e["name"] for e in t["traceEvents"] if e["ph"] == "X"}
+assert {"gnn.pack", "gnn.compile", "gnn.step"} <= names, sorted(names)
+assert any("pack_cache" in m for m in t["repro_metrics"]), \
+    sorted(t["repro_metrics"])
+assert t["repro_decisions"], "no decision recorded in traced gnn run"
+EOF
+rm -f "$OBS_TRACE"
 # perf-trajectory artifact: measured kernel/elementwise-pass counts for
 # the fused GNN hot path + fused-vs-unfused pricing, the distributed
 # per-shard config table and overlap on/off column, the skewed-corpus
-# balanced-vs-uniform schedule smoke (priced + measured makespan), and
-# the priced-vs-measured rank correlations (small tier, pre/post fit) —
-# all in one machine-readable, schema-validated BENCH_spmm.json
-python -m benchmarks.run --only fusion,dist,spmm,calibration --json BENCH_spmm.json
+# balanced-vs-uniform schedule smoke (priced + measured makespan), the
+# priced-vs-measured rank correlations (small tier, pre/post fit), and
+# the calibrated-decider agreement/regret table — all in one
+# machine-readable, schema-validated BENCH_spmm.json, with the whole
+# sweep traced (run.py records the trace path in the payload)
+python -m benchmarks.run --only fusion,dist,spmm,calibration,decider \
+    --json BENCH_spmm.json --trace BENCH_trace.json
+python -m repro.apps.obs_report BENCH_trace.json --top 5
+python - <<'EOF'
+import json
+p = json.load(open("BENCH_spmm.json"))
+assert p.get("trace") == "BENCH_trace.json", p.get("trace")
+assert "decider" in p and "agreement" in p["decider"], sorted(p)
+EOF
 echo "ci: OK"

@@ -26,6 +26,7 @@ from repro.core.decider import RandomForest, SpMMDecider
 from repro.core.features import extract_features
 from repro.core.pcsr import SpMMConfig, config_space
 from repro.data.graphs import corpus
+from repro.obs import span, tracing
 
 DIMS = tuple(range(16, 257, 16))           # the paper's dim sweep
 
@@ -57,14 +58,16 @@ def build_dataset(graphs=None, dims=DIMS, mode: str = "model",
     samples, times, by_graph = [], {}, {}
     for g in graphs:
         t0 = time.time()
-        feats = extract_features(g.csr)
-        cm = (CostModel(g.csr, calibration=calibration)
-              if mode == "model" else None)
-        for dim in dims:
-            res = oracle_search(g.csr, dim, mode=mode, cm=cm, op=op, H=H)
-            samples.append((feats, dim, res.best_config))
-            times[(g.name, dim)] = res.times
-            by_graph.setdefault(g.name, []).append(len(samples) - 1)
+        with span("decider.label_graph", graph=g.name, mode=mode, op=op):
+            feats = extract_features(g.csr)
+            cm = (CostModel(g.csr, calibration=calibration)
+                  if mode == "model" else None)
+            for dim in dims:
+                res = oracle_search(g.csr, dim, mode=mode, cm=cm, op=op,
+                                    H=H)
+                samples.append((feats, dim, res.best_config))
+                times[(g.name, dim)] = res.times
+                by_graph.setdefault(g.name, []).append(len(samples) - 1)
         if verbose:
             print(f"  {g.name}: {time.time()-t0:.1f}s")
     return DeciderDataset(samples, times, [g.name for g in graphs],
@@ -77,6 +80,14 @@ class DeciderEval:
     overall_pred: float
     overall_rnd: float
     decider: SpMMDecider
+    # decider-vs-oracle quality on the held-out graphs: how often the
+    # predicted config matches the oracle-best time (price ties count),
+    # and the time ratio paid when it does not (regret = t_pred/t_best ≥ 1)
+    per_dim_quality: dict = field(default_factory=dict)
+    #   dim -> {"agreement": .., "mean_regret": ..}
+    agreement: float = 0.0
+    mean_regret: float = 1.0
+    max_regret: float = 1.0
 
 
 def train_eval(ds: DeciderDataset, *, test_frac=0.2, seed=0,
@@ -105,15 +116,28 @@ def train_eval(ds: DeciderDataset, *, test_frac=0.2, seed=0,
         pred = decider.predict(feats, dim)
         t_pred = tt.get(pred, max(tt.values()))
         rnd_cfg = list(tt)[int(rng.integers(len(tt)))]
-        e = per_dim.setdefault(dim, [[], []])
+        e = per_dim.setdefault(dim, [[], [], [], []])
         e[0].append(t_best / t_pred)       # normalized perf (throughput)
         e[1].append(t_best / tt[rnd_cfg])
+        # agreement up to price ties: several configs often price
+        # identically, so the oracle's exact tuple is arbitrary — what
+        # matters is whether the pick costs what the best one costs
+        e[2].append(1.0 if t_pred <= t_best * 1.001 else 0.0)
+        e[3].append(t_pred / max(t_best, 1e-300))      # regret ≥ 1
     agg = {d: (float(np.mean(v[0])), float(np.mean(v[1])))
            for d, v in sorted(per_dim.items())}
+    quality = {d: {"agreement": float(np.mean(v[2])),
+                   "mean_regret": float(np.mean(v[3]))}
+               for d, v in sorted(per_dim.items())}
     allp = [x for v in per_dim.values() for x in v[0]]
     allr = [x for v in per_dim.values() for x in v[1]]
+    alla = [x for v in per_dim.values() for x in v[2]]
+    allg = [x for v in per_dim.values() for x in v[3]]
     return DeciderEval(agg, float(np.mean(allp)), float(np.mean(allr)),
-                       decider)
+                       decider, per_dim_quality=quality,
+                       agreement=float(np.mean(alla)),
+                       mean_regret=float(np.mean(allg)),
+                       max_regret=float(np.max(allg)))
 
 
 def main(argv=None):
@@ -141,20 +165,34 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None,
                     help="pickle the trained decider to this path")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the labeling + "
+                    "training run (per-graph spans, oracle decision log)")
     args = ap.parse_args(argv)
 
+    import contextlib
+    ctx = tracing(args.trace) if args.trace else contextlib.nullcontext()
     dims = (tuple(int(d) for d in args.dims.split(","))
             if args.dims else DIMS)
-    ds = build_dataset(corpus(args.scale), dims=dims, mode=args.mode,
-                       op=args.op, H=args.heads,
-                       calibration=args.calibration, verbose=True)
-    ev = train_eval(ds, seed=args.seed)
+    with ctx:
+        ds = build_dataset(corpus(args.scale), dims=dims, mode=args.mode,
+                           op=args.op, H=args.heads,
+                           calibration=args.calibration, verbose=True)
+        with span("decider.train_eval", n_samples=len(ds.samples)):
+            ev = train_eval(ds, seed=args.seed)
+    if args.trace:
+        print(f"trace written to {args.trace}")
     print(f"op={args.op} mode={args.mode} H={args.heads} "
           f"calibrated={args.calibration is not None} "
           f"graphs={len(ds.graph_names)}")
     for d, (pred, rnd) in ev.per_dim.items():
-        print(f"  dim={d:4d}  pred_norm={pred:.3f}  random_norm={rnd:.3f}")
-    print(f"overall: pred={ev.overall_pred:.3f} random={ev.overall_rnd:.3f}")
+        q = ev.per_dim_quality[d]
+        print(f"  dim={d:4d}  pred_norm={pred:.3f}  random_norm={rnd:.3f}"
+              f"  agreement={q['agreement']:.2f}"
+              f"  regret={q['mean_regret']:.3f}")
+    print(f"overall: pred={ev.overall_pred:.3f} random={ev.overall_rnd:.3f} "
+          f"agreement={ev.agreement:.3f} mean_regret={ev.mean_regret:.3f} "
+          f"max_regret={ev.max_regret:.3f}")
     if args.save:
         ev.decider.save(args.save)
         print(f"saved decider to {args.save}")

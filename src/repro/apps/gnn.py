@@ -27,6 +27,7 @@ from repro.data.tasks import NodeTask
 from repro.models.gnn import (accuracy, gat_forward, gcn_forward,
                               gin_forward, init_gat, init_gcn, init_gin,
                               node_ce_loss)
+from repro.obs import instant, span, tracing
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.pipeline import ParamSpMM
 
@@ -92,9 +93,12 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
             # its dK/dVf SpMMs on the operator's cached transpose PCSR
             kw.setdefault("build_transpose",
                           kw.get("backend", "engine") == "pallas")
-    spmm, perm, cfg = build_spmm(task, hidden, spmm_mode,
-                                 partitions=partitions,
-                                 partition_strategy=partition_strategy, **kw)
+    with span("gnn.pack", model=model, mode=spmm_mode,
+              partitions=partitions):
+        spmm, perm, cfg = build_spmm(task, hidden, spmm_mode,
+                                     partitions=partitions,
+                                     partition_strategy=partition_strategy,
+                                     **kw)
     if not fused and model != "gat" and hasattr(spmm, "fused"):
         op = spmm                 # hide the fusion surface: plain closure
         spmm = lambda B: op(B)    # → gcn/gin take the unfused branch
@@ -148,17 +152,23 @@ def train_gnn(task: NodeTask, *, model: str = "gcn", hidden: int = 64,
     res = GNNTrainResult(config=cfg)
     t0 = None
     for step in range(steps):
-        loss, grads = grad_fn(params)
-        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        # step 0 pays tracing + compilation — its span is named apart so
+        # the trace separates warmup from steady-state steps
+        with span("gnn.compile" if step == 0 else "gnn.step", step=step):
+            loss, grads = grad_fn(params)
+            params, opt = adamw_update(params, grads, opt, opt_cfg)
+            if step == 0:
+                jax.block_until_ready(loss)
         res.losses.append(float(loss))
         if step == 0:      # exclude jit warmup from timing
-            jax.block_until_ready(loss)
             t0 = time.perf_counter()
     jax.block_until_ready(params)
     if steps > 1:
         res.seconds_per_step = (time.perf_counter() - t0) / (steps - 1)
-    logits = fwd(params, X, spmm)
-    res.val_acc = float(accuracy(logits, labels, vmask))
+        instant("gnn.steady_state", seconds_per_step=res.seconds_per_step)
+    with span("gnn.eval"):
+        logits = fwd(params, X, spmm)
+        res.val_acc = float(accuracy(logits, labels, vmask))
     return res
 
 
@@ -183,15 +193,23 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--heads", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run (read it "
+                    "with repro.apps.obs_report or Perfetto)")
     args = ap.parse_args(argv)
 
-    task = community_task(seed=args.seed)
-    res = train_gnn(task, model=args.model, hidden=args.hidden,
-                    n_layers=args.layers, steps=args.steps,
-                    spmm_mode=args.spmm, heads=args.heads, seed=args.seed,
-                    partitions=args.partitions,
-                    partition_strategy=args.partition_strategy,
-                    overlap=args.overlap)
+    import contextlib
+    ctx = tracing(args.trace) if args.trace else contextlib.nullcontext()
+    with ctx:
+        task = community_task(seed=args.seed)
+        res = train_gnn(task, model=args.model, hidden=args.hidden,
+                        n_layers=args.layers, steps=args.steps,
+                        spmm_mode=args.spmm, heads=args.heads,
+                        seed=args.seed, partitions=args.partitions,
+                        partition_strategy=args.partition_strategy,
+                        overlap=args.overlap)
+    if args.trace:
+        print(f"trace written to {args.trace}")
     print(f"val_acc={res.val_acc:.3f} "
           f"ms_per_step={res.seconds_per_step * 1e3:.1f}")
     cfgs = res.config if isinstance(res.config, list) else [res.config]

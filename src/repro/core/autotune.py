@@ -16,6 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import (decisions as _obs_decisions, metrics as _obs_metrics,
+                       trace as _obs_trace)
+
 from .cost_model import CostModel
 from .pcsr import SpMMConfig, build_pcsr, config_space
 from .sparse import CSRMatrix
@@ -30,6 +33,7 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
+    _obs_metrics.counter("autotune_measurements_total").inc(reps)
     return float(np.median(ts))
 
 
@@ -70,6 +74,22 @@ def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
     if H < 1:
         raise ValueError(f"H must be ≥ 1, got {H}")
     space = space or config_space(dim)
+    with _obs_trace.span("oracle.search", mode=mode, op=op, dim=dim, H=H,
+                         n_configs=len(space)):
+        times = _oracle_times(csr, dim, space, mode, reps, rng_seed, cm,
+                              op, H, calibration)
+    best = min(times, key=times.get)
+    if _obs_trace.trace_enabled():
+        _obs_decisions.record_decision(
+            csr, source=f"oracle_{mode}", op=op, dim=dim, heads=H,
+            chosen=best, predicted_seconds=times[best],
+            candidates=times.items(),
+            calibration=cm.calibration if cm is not None else calibration)
+    return OracleResult(times, best, times[best])
+
+
+def _oracle_times(csr, dim, space, mode, reps, rng_seed, cm, op, H,
+                  calibration) -> dict:
     times = {}
     if mode == "model":
         if cm is None:
@@ -112,8 +132,7 @@ def oracle_search(csr: CSRMatrix, dim: int, space=None, mode: str = "model",
             times[cfg] = t
     else:
         raise ValueError(mode)
-    best = min(times, key=times.get)
-    return OracleResult(times, best, times[best])
+    return times
 
 
 def throughput_gflops(csr: CSRMatrix, dim: int, seconds: float) -> float:

@@ -25,6 +25,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import decisions as _obs_decisions, trace as _obs_trace
+
 from .pcsr import SpMMConfig, PCSRStats, pcsr_stats, LANES
 from .sparse import CSRMatrix
 
@@ -297,10 +299,17 @@ class CostModel:
     def best(self, dim: int, space, op: str = "spmm", *, H: int = 1,
              fused: bool = True) -> tuple[SpMMConfig, float]:
         best_cfg, best_t = None, np.inf
+        scored = []
         for cfg in space:
             t = self.time(dim, cfg, op, H=H, fused=fused)
+            scored.append((cfg, t))
             if t < best_t:
                 best_cfg, best_t = cfg, t
+        if _obs_trace.trace_enabled() and best_cfg is not None:
+            _obs_decisions.record_decision(
+                self.csr, source="cost_model", op=op, dim=dim, heads=H,
+                chosen=best_cfg, predicted_seconds=best_t,
+                candidates=scored, calibration=self.calibration)
         return best_cfg, best_t
 
 

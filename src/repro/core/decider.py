@@ -11,6 +11,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import decisions as _obs_decisions, trace as _obs_trace
+
 from .features import MatrixFeatures, extract_features
 from .pcsr import SpMMConfig, config_space
 from .sparse import CSRMatrix
@@ -164,7 +166,13 @@ class SpMMDecider:
         # mask configs whose F exceeds this dim's tile range
         valid = np.array([c.F <= max(1, -(-dim // 128)) for c in self.space])
         proba = np.where(valid, proba, -1.0)
-        return self.space[int(proba.argmax())]
+        chosen = self.space[int(proba.argmax())]
+        if _obs_trace.trace_enabled():
+            _obs_decisions.record_decision(
+                source="decider", dim=dim, chosen=chosen,
+                scores=[(c, p) for c, p in zip(self.space, proba) if p >= 0],
+                snapshot=feats.as_dict())
+        return chosen
 
     def predict_for(self, csr: CSRMatrix, dim: int) -> SpMMConfig:
         return self.predict(extract_features(csr), dim)

@@ -35,8 +35,11 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from time import perf_counter
 
 import numpy as np
+
+from repro.obs import metrics as _obs_metrics, trace as _obs_trace
 
 LANES = 128          # TPU lane width (the paper's warp size ω=32 analogue)
 SUBLANES = 8         # f32 sublane quantum
@@ -167,14 +170,13 @@ class PCSR:
                 + self.init.nbytes + self.vals.nbytes)
 
     def to_jax(self):
+        """Device-ready uncovered H=1 arrays, routed through the
+        ``steering()`` cache so every backend shares one pack accessor
+        (and its hit/miss accounting)."""
         import jax.numpy as jnp
-        return {
-            "colidx": jnp.asarray(self.colidx),
-            "lrow": jnp.asarray(self.lrow),
-            "trow": jnp.asarray(self.trow),
-            "init": jnp.asarray(self.init),
-            "vals": jnp.asarray(self.vals),
-        }
+        st = self.steering()
+        return {k: jnp.asarray(st[k])
+                for k in ("colidx", "lrow", "trow", "init", "vals")}
 
     @property
     def fini(self) -> np.ndarray:
@@ -235,7 +237,11 @@ class PCSR:
         cache = self.__dict__.setdefault("_steering_cache", {})
         key = (H, covered)
         if key in cache:
+            _obs_metrics.counter("pack_cache_hits_total").inc(
+                H=H, covered=covered)
             return cache[key]
+        _obs_metrics.counter("pack_cache_misses_total").inc(
+            H=H, covered=covered)
         colidx, lrow = self.colidx, self.lrow
         trow, init, fini, vals = self.trow, self.init, self.fini, self.vals
         if covered:
@@ -347,6 +353,22 @@ def build_pcsr(indptr, indices, data, n_rows, n_cols,
     (``fini``/consecutive-revisit accumulation), never on ascending
     order, so the schedule needs no kernel change.
     """
+    if not _obs_trace.trace_enabled():
+        return _build_pcsr(indptr, indices, data, n_rows, n_cols,
+                           config, unbalanced_cap)
+    with _obs_trace.span("pcsr.build", config=str(config.astuple()),
+                         n_rows=int(n_rows),
+                         nnz=int(np.asarray(indices).shape[0])):
+        t0 = perf_counter()
+        p = _build_pcsr(indptr, indices, data, n_rows, n_cols,
+                        config, unbalanced_cap)
+        _obs_metrics.histogram("pack_build_seconds").observe(
+            perf_counter() - t0, config=str(config.astuple()))
+    return p
+
+
+def _build_pcsr(indptr, indices, data, n_rows, n_cols,
+                config: SpMMConfig, unbalanced_cap: int) -> PCSR:
     V, W, S, Bal = config.V, config.W, config.S, config.B
     indptr = np.asarray(indptr, np.int64)
     indices = np.asarray(indices, np.int64)

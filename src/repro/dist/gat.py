@@ -46,6 +46,7 @@ from repro.core.engine import (_engine, _engine_sddmm, _slot_rows,
                                attend_scores)
 from repro.core.pcsr import (LANES, SUBLANES, slot_transfer_map,
                              transpose_pcsr)
+from repro.obs import trace as _obs_trace
 
 from .halo import halo_exchange, halo_scatter_back
 from .packing import AXIS, PackedShards, pack_shards, shard_map_2d
@@ -100,16 +101,25 @@ def build_gat_pack(pcsrs, H: int,
     """Pack the shards' head-tiled covered steering for one head count.
     Pass an existing H=1 pack as ``fwd`` to reuse it (the single-head
     covered arrays are identical — no second device-resident copy)."""
-    return GatShardPack(
-        H, fwd if fwd is not None else pack_shards(pcsrs, H=H),
-        logits_pad=max(H * p.num_chunks * p.config.V * p.K for p in pcsrs),
-        stats_pad=max(H * p.n_blocks * SUBLANES * LANES for p in pcsrs))
+    with _obs_trace.span("gat.pack", H=H, n_parts=len(pcsrs),
+                         reused=fwd is not None):
+        return GatShardPack(
+            H, fwd if fwd is not None else pack_shards(pcsrs, H=H),
+            logits_pad=max(H * p.num_chunks * p.config.V * p.K
+                           for p in pcsrs),
+            stats_pad=max(H * p.n_blocks * SUBLANES * LANES for p in pcsrs))
 
 
 def ensure_gat_bwd_pack(pack: GatShardPack) -> None:
     """Build the transpose-PCSR pack + slot transfer maps (idempotent)."""
     if pack.bwd is not None:
         return
+    with _obs_trace.span("gat.bwd_pack", H=pack.H,
+                         n_parts=len(pack.fwd.pcsrs)):
+        _build_gat_bwd_pack(pack)
+
+
+def _build_gat_bwd_pack(pack: GatShardPack) -> None:
     pts = [transpose_pcsr(p) for p in pack.fwd.pcsrs]
     maps = [slot_transfer_map(p, pt)
             for p, pt in zip(pack.fwd.pcsrs, pts)]

@@ -34,6 +34,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+
 from .partition import RowPartition
 
 
@@ -104,6 +106,10 @@ def halo_exchange(b_loc, send_idx_loc, halo_src_loc, *,
 
     send = jnp.take(b_loc, send_idx_loc, axis=0)
     full = jax.lax.all_gather(send, axis_name, axis=0, tiled=True)
+    # observed at trace time (once per compiled program, not per step):
+    # bytes of the all-gathered send buffer every shard receives
+    _obs_metrics.counter("halo_exchange_bytes_total").inc(
+        int(np.prod(full.shape)) * full.dtype.itemsize, direction="gather")
     return jnp.take(full, halo_src_loc, axis=0)
 
 
@@ -123,6 +129,9 @@ def halo_scatter_back(d_halo, send_idx_loc, halo_src_loc, *,
     import jax.numpy as jnp
 
     d = d_halo.shape[-1]
+    _obs_metrics.counter("halo_exchange_bytes_total").inc(
+        int(n_parts * max_send * d) * d_halo.dtype.itemsize,
+        direction="scatter")
     buf = jnp.zeros((n_parts * max_send, d), d_halo.dtype)
     buf = buf.at[halo_src_loc].add(d_halo)
     own = jax.lax.psum_scatter(buf, axis_name, scatter_dimension=0,

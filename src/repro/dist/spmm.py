@@ -62,7 +62,9 @@ from jax.sharding import PartitionSpec
 
 from repro.core import (CostModel, CSRMatrix, SpMMConfig, build_pcsr,
                         config_space, extract_features)
+from repro.core.cost_model import halo_exchange_cost, overlap_exposed_cost
 from repro.core.engine import _engine, apply_epilogue, epilogue_grad
+from repro.obs import metrics as _obs_metrics, trace as _obs_trace
 
 from .gat import build_dist_gat, build_gat_pack
 from .halo import HaloSpec, build_halo, halo_exchange, halo_scatter_back
@@ -192,15 +194,21 @@ class DistGraph:
         self.predicted_times: list = []
         if configs is None:
             if decider is not None:
-                self.configs = [decider.predict(extract_features(s.csr), dim)
-                                for s in self.part.shards]
+                with _obs_trace.span("dist.select_configs", picker="decider",
+                                     n_parts=n_parts):
+                    self.configs = [
+                        decider.predict(extract_features(s.csr), dim)
+                        for s in self.part.shards]
             else:
                 self.configs = []
-                for s in self.part.shards:
-                    cfg, t = CostModel(s.csr, calibration=calibration).best(
-                        dim, space, op=op, H=heads)
-                    self.configs.append(cfg)
-                    self.predicted_times.append(t)
+                with _obs_trace.span("dist.select_configs",
+                                     picker="cost_model", n_parts=n_parts):
+                    for s in self.part.shards:
+                        cfg, t = CostModel(s.csr,
+                                           calibration=calibration).best(
+                            dim, space, op=op, H=heads)
+                        self.configs.append(cfg)
+                        self.predicted_times.append(t)
         elif isinstance(configs, SpMMConfig):
             self.configs = [configs] * n_parts
         else:
@@ -208,10 +216,11 @@ class DistGraph:
             if len(self.configs) != n_parts:
                 raise ValueError("configs list must have one entry per shard")
 
-        self._fwd = pack_shards(
-            [build_pcsr(s.csr.indptr, s.csr.indices, s.csr.data,
-                        s.csr.n_rows, s.csr.n_cols, cfg)
-             for s, cfg in zip(self.part.shards, self.configs)])
+        with _obs_trace.span("dist.pack", n_parts=n_parts):
+            self._fwd = pack_shards(
+                [build_pcsr(s.csr.indptr, s.csr.indices, s.csr.data,
+                            s.csr.n_rows, s.csr.n_cols, cfg)
+                 for s, cfg in zip(self.part.shards, self.configs)])
 
         # overlap mode: split every shard into local + halo sub-matrices,
         # each under its own cost-model-selected config (the halo part of
@@ -243,6 +252,21 @@ class DistGraph:
                                              hal.n_cols, hc))
             self._loc = pack_shards(loc_pcsrs)
             self._halo_pack = pack_shards(halo_pcsrs)
+            if _obs_trace.trace_enabled():
+                # priced overlap decomposition per shard: the wire time
+                # the schedule is trying to hide vs what stays exposed
+                exch = halo_exchange_cost(self.halo.gathered_rows, dim)
+                _obs_metrics.gauge("halo_exchange_priced_seconds").set(exch)
+                for i, ((loc, hal), (lc, hc)) in enumerate(
+                        zip(self._split_csrs, self.overlap_configs)):
+                    tl = CostModel(loc, calibration=calibration).time(
+                        dim, lc, H=heads)
+                    th = CostModel(hal, calibration=calibration).time(
+                        dim, hc, H=heads)
+                    _obs_metrics.gauge("overlap_exposed_seconds").set(
+                        overlap_exposed_cost(tl, th, exch), shard=i)
+                    _obs_metrics.gauge("overlap_serialized_seconds").set(
+                        tl + th + exch, shard=i)
 
         self._bwd_pack = None              # transpose PCSRs built on first
         self._bwd_split_pack = None        # backward only — forward-only /

@@ -1,0 +1,42 @@
+"""Process-wide telemetry: spans, counters, decision log, drift checks.
+
+One switch gates everything: tracing is off by default and every
+instrumentation point in the hot paths degrades to a near-zero no-op.
+Enable with ``obs.tracing(path)`` (context manager), the ``--trace``
+flags on ``apps/gnn`` / ``benchmarks/run.py`` / ``decider_train``, or
+``REPRO_TRACE=path`` in the environment; read the exported Chrome-trace
+JSON in Perfetto or with ``python -m repro.apps.obs_report``.
+
+See docs/OBSERVABILITY.md for the span/counter inventory and the
+decision-log schema.
+"""
+from repro.obs.trace import (
+    tracing, start_tracing, stop_tracing, trace_enabled,
+    span, instant, export_trace, trace_events,
+)
+from repro.obs.metrics import (
+    counter, gauge, histogram,
+    metrics_snapshot, reset_metrics, intercept_pallas,
+)
+from repro.obs.decisions import (
+    DecisionRecord, DriftAdvisory, DRIFT_FEATURES, DRIFT_THRESHOLD,
+    record_decision, decision_log, clear_decisions,
+    graph_snapshot, check_drift,
+)
+from repro.obs.trace import _env_autostart
+
+__all__ = [
+    # trace
+    "tracing", "start_tracing", "stop_tracing", "trace_enabled",
+    "span", "instant", "export_trace", "trace_events",
+    # metrics
+    "counter", "gauge", "histogram",
+    "metrics_snapshot", "reset_metrics", "intercept_pallas",
+    # decisions
+    "DecisionRecord", "DriftAdvisory", "DRIFT_FEATURES", "DRIFT_THRESHOLD",
+    "record_decision", "decision_log", "clear_decisions",
+    "graph_snapshot", "check_drift",
+]
+
+_env_autostart()
+del _env_autostart

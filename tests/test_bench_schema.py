@@ -50,6 +50,16 @@ def test_validate_row_accepts_golden_row():
     assert validate_row(_row(us_per_call=0)) == {"k": "v"}
 
 
+def test_validate_row_skipped_requires_null_timing():
+    # a skipped row carries NO timing — us_per_call must be JSON null
+    d = validate_row(_row(us_per_call=None, derived="skipped=p1_no_halo"))
+    assert d["skipped"] == "p1_no_halo"
+    # ... and a timing next to a skip annotation is the fake-measurement
+    # artifact this schema exists to kill
+    with pytest.raises(ValueError, match="skipped"):
+        validate_row(_row(us_per_call=42.0, derived="skipped=p1_no_halo"))
+
+
 @pytest.mark.parametrize("bad", [
     _row(name=""),
     _row(name=3),
@@ -58,6 +68,7 @@ def test_validate_row_accepts_golden_row():
     _row(us_per_call=float("nan")),
     _row(us_per_call=float("inf")),
     _row(us_per_call=-1.0),
+    _row(us_per_call=None),                  # null timing without skipped=
     _row(derived=None),
     _row(derived="free text"),
     {"name": "x", "us_per_call": 1.0},                       # missing key
@@ -71,15 +82,16 @@ def test_validate_row_rejects(bad):
 # ------------------------------------------------- bench_dist overlap row
 def test_overlap_row_p1_is_annotated_not_measured():
     """At P=1 there is no halo: the row must carry the skip annotation
-    (and the off-schedule time), never an on-vs-off 'overlap costs 1.5x'
-    artifact — the schema regression this file exists for."""
+    with a NULL timing — neither an on-vs-off 'overlap costs 1.5x'
+    artifact nor the off-schedule time masquerading as an overlap
+    measurement — the schema regression this file exists for."""
     from benchmarks.bench_dist import overlap_row
 
     ov = {"skipped": "p1_no_halo", "measured_off_us": 19882.9,
           "overlapped_us": 21000.0, "exchange_us": 0.0}
     name, us, derived = overlap_row("rmat13", 1, ov)
     assert name == "dist/rmat13/p1/overlap"
-    assert us == pytest.approx(19882.9)
+    assert us is None                 # skipped ⇒ no timing at all
     d = validate_row({"name": name, "us_per_call": us, "derived": derived})
     assert d["skipped"] == "p1_no_halo"
     assert "off_us" not in d          # no fake on/off comparison at P=1
@@ -122,4 +134,5 @@ def test_bench_artifact_has_no_p1_overlap_artifact():
         if row["name"].endswith("/p1/overlap"):
             d = parse_derived(row["derived"])
             assert d.get("skipped") == "p1_no_halo", row
+            assert row["us_per_call"] is None, row
             assert "off_us" not in d, row

@@ -1,0 +1,276 @@
+"""Runtime telemetry layer (repro.obs): span nesting + Chrome-trace
+schema, counter/label semantics, the structured decision log, drift
+advisories, and the disabled-mode guarantees (zero events recorded,
+traced and untraced training bit-identical)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import decisions as obs_decisions
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.core.cost_model import CostModel
+from repro.core.pcsr import SpMMConfig, build_pcsr, config_space
+from repro.core.sparse import CSRMatrix
+
+from conftest import random_csr
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends untraced with empty registries — a
+    failing test must not leak an active session into the next one."""
+    if obs.trace_enabled():                            # pragma: no cover
+        obs.stop_tracing()
+    obs.reset_metrics()
+    obs.clear_decisions()
+    yield
+    if obs.trace_enabled():
+        obs.stop_tracing()
+    obs.reset_metrics()
+    obs.clear_decisions()
+
+
+# ------------------------------------------------------- disabled mode
+def test_disabled_mode_records_nothing():
+    assert not obs.trace_enabled()
+    with obs.span("work", step=1):
+        obs.instant("tick")
+    obs.counter("c_test").inc()
+    obs.gauge("g_test").set(3.0)
+    obs.histogram("h_test").observe(1.0)
+    assert obs.trace_events() == []
+    assert obs.metrics_snapshot() == {}
+    assert obs_decisions.record_decision(
+        source="cost_model", dim=32, chosen=(8, 1, 1, False, False)) is None
+    assert obs.decision_log() == []
+
+
+def test_disabled_span_is_the_shared_null_singleton():
+    # the near-zero-overhead contract: no allocation per disabled span
+    assert obs.span("a") is obs.span("b", x=1)
+
+
+# ------------------------------------------- spans + chrome-trace export
+def test_span_nesting_and_chrome_trace_schema(tmp_path):
+    path = tmp_path / "t.json"
+    with obs.tracing(str(path)):
+        with obs.span("outer", kind="demo"):
+            with obs.span("inner"):
+                obs.instant("mark", note="hi")
+        obs.counter("c_events").inc(2.0, phase="x")
+    payload = json.loads(path.read_text())
+    evs = payload["traceEvents"]
+
+    complete = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(complete) >= {"outer", "inner"}
+    for e in complete.values():        # chrome "X" schema
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["dur"] >= 0
+    # nesting by containment: inner's interval lies inside outer's
+    o, i = complete["outer"], complete["inner"]
+    assert o["ts"] <= i["ts"]
+    assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-6
+    assert o["args"]["kind"] == "demo"
+
+    inst = [e for e in evs if e["ph"] == "i" and e["name"] == "mark"]
+    assert inst and inst[0]["s"] == "t" and inst[0]["args"]["note"] == "hi"
+    # one final "C" counter event per series so Perfetto renders totals
+    cnt = [e for e in evs if e["ph"] == "C" and "c_events" in e["name"]]
+    assert cnt and cnt[0]["args"]["value"] == 2.0
+    assert payload["repro_metrics"]["c_events"] == {"phase=x": 2.0}
+
+
+def test_nested_start_tracing_raises():
+    obs.start_tracing()
+    with pytest.raises(RuntimeError, match="already active"):
+        obs.start_tracing()
+    obs.stop_tracing()
+
+
+def test_tracing_session_is_its_own_window(tmp_path):
+    with obs.tracing():
+        obs.counter("c_window").inc(5.0)
+        obs_decisions.record_decision(
+            source="cost_model", dim=16, chosen=(8, 1, 1, False, False))
+    assert len(obs.decision_log()) == 1     # decisions survive the stop
+    with obs.tracing():                     # ... until the next session
+        assert obs.metrics_snapshot() == {}
+        assert obs.decision_log() == []
+
+
+# ------------------------------------------------------------- metrics
+def test_counter_label_semantics():
+    with obs.tracing():
+        c = obs.counter("c_lbl")
+        c.inc(a="1", b="2")
+        c.inc(2.0, b="2", a="1")            # kw order must not matter
+        c.inc(a="1", b="3")                 # distinct series
+        c.inc()                             # unlabeled series
+        snap = obs.metrics_snapshot()["c_lbl"]
+    assert snap == {"a=1,b=2": 3.0, "a=1,b=3": 1.0, "": 1.0}
+
+
+def test_gauge_and_histogram_semantics():
+    with obs.tracing():
+        obs.gauge("g_sem").set(1.0, shard=0)
+        obs.gauge("g_sem").set(4.0, shard=0)        # last write wins
+        h = obs.histogram("h_sem")
+        for v in (1.0, 3.0, 2.0):
+            h.observe(v)
+        snap = obs.metrics_snapshot()
+    assert snap["g_sem"] == {"shard=0": 4.0}
+    assert snap["h_sem"][""] == {"count": 3, "sum": 6.0,
+                                 "min": 1.0, "max": 3.0}
+
+
+def test_metric_kind_mismatch_raises():
+    obs.counter("m_kind")
+    with pytest.raises(TypeError, match="counter"):
+        obs.gauge("m_kind")
+
+
+def test_pallas_probe_counts_launches(rng):
+    """A kernel traced during the session shows up in
+    pallas_calls_total — same interception ``count_pallas_calls`` uses."""
+    from repro.kernels.paramspmm.ops import paramspmm
+
+    csr, _ = random_csr(rng, 43, 0.2)      # fresh shape → no jit cache hit
+    p = build_pcsr(csr.indptr, csr.indices, csr.data, 43, 43,
+                   SpMMConfig(V=1, S=False, W=8, F=1))
+    B = np.asarray(rng.standard_normal((43, 8)), np.float32)
+    with obs.tracing():
+        paramspmm(p, B, interpret=True)
+        snap = obs.metrics_snapshot()
+    series = snap.get("pallas_calls_total", {})
+    assert series and sum(series.values()) >= 1, snap.keys()
+
+
+# -------------------------------------------------------- decision log
+def test_cost_model_best_records_decision(rng, tmp_path):
+    csr, _ = random_csr(rng, 64, 0.1)
+    path = tmp_path / "d.json"
+    with obs.tracing(str(path)):
+        cfg, _ = CostModel(csr).best(32, config_space(32))
+    log = obs.decision_log()
+    assert len(log) == 1
+    rec = log[0]
+    assert rec.source == "cost_model" and rec.op == "spmm"
+    assert rec.dim == 32 and rec.chosen == tuple(cfg.astuple())
+    assert rec.calibration is None          # analytic constants
+    # top-k candidates sorted cheapest-first, chosen == cheapest
+    secs = [c["seconds"] for c in rec.topk]
+    assert secs == sorted(secs) and len(secs) >= 2
+    assert tuple(rec.topk[0]["config"]) == rec.chosen
+    assert rec.predicted_seconds == pytest.approx(secs[0])
+    for name in obs_decisions.DRIFT_FEATURES:
+        assert name in rec.snapshot
+    # round-trip through the exported trace
+    payload = json.loads(path.read_text())
+    [d] = payload["repro_decisions"]
+    assert d["chosen"] == list(rec.chosen)
+    assert d["snapshot"]["nnz"] == rec.snapshot["nnz"]
+    assert payload["repro_metrics"]["decisions_total"] == {
+        "op=spmm,source=cost_model": 1.0}
+
+
+def test_record_decision_scores_rank_highest_first():
+    space = [(8, 1, 1, False, False), (8, 2, 1, False, False),
+             (16, 1, 2, True, False)]
+    with obs.tracing():
+        rec = obs_decisions.record_decision(
+            source="decider", dim=64, chosen=space[1],
+            scores=zip(space, [0.2, 0.7, 0.1]), snapshot={"n": 1.0}, k=2)
+    assert [c["score"] for c in rec.topk] == [0.7, 0.2]
+    assert tuple(rec.topk[0]["config"]) == space[1]
+
+
+# ----------------------------------------------------- drift advisories
+def _densified(csr, rng):
+    A = csr.to_dense()
+    extra = (rng.random(A.shape) < 0.3).astype(np.float32)
+    return CSRMatrix.from_dense(A + extra)
+
+
+def test_drift_advisory_fires_on_mutated_graph_only(rng):
+    csr, _ = random_csr(rng, 64, 0.05)
+    with obs.tracing():
+        CostModel(csr).best(32, config_space(32))
+    # post-trace: same graph → quiet
+    assert obs_decisions.check_drift(csr) is None
+    # densified graph → advisory naming the moved features + the pick
+    adv = obs_decisions.check_drift(_densified(csr, rng))
+    assert adv is not None and "nnz" in adv.drifted
+    assert adv.drifted["nnz"]["rel"] > obs_decisions.DRIFT_THRESHOLD
+    assert str(adv.record.chosen) in adv.message
+    assert "re-run config selection" in adv.message
+
+
+def test_check_drift_without_decisions_raises(rng):
+    csr, _ = random_csr(rng, 32, 0.1)
+    with pytest.raises(ValueError, match="no decision"):
+        obs_decisions.check_drift(csr)
+
+
+# ------------------------------------- traced == untraced (gnn training)
+def test_traced_training_matches_untraced(tmp_path):
+    from repro.apps.gnn import train_gnn
+    from repro.data.tasks import community_task
+
+    task = community_task(n_blocks=4, block_size=32, feat_dim=8,
+                          p_in=0.3, seed=0)
+    kw = dict(model="gcn", hidden=16, n_layers=2, steps=4, seed=0)
+    base = train_gnn(task, **kw)
+    path = tmp_path / "gnn.json"
+    with obs.tracing(str(path)):
+        traced = train_gnn(task, **kw)
+    # observability must not perturb the computation
+    np.testing.assert_array_equal(np.asarray(base.losses),
+                                  np.asarray(traced.losses))
+    payload = json.loads(path.read_text())
+    names = {e["name"] for e in payload["traceEvents"] if e["ph"] == "X"}
+    assert {"gnn.pack", "gnn.compile", "gnn.step"} <= names
+    hits = payload["repro_metrics"].get("pack_cache_hits_total", {})
+    assert sum(hits.values()) >= 1          # steering cache observed
+    assert payload["repro_decisions"]        # config pick logged
+
+
+# ----------------------------------------------------------- obs_report
+def test_obs_report_summarizes_trace(tmp_path, capsys, rng):
+    from repro.apps import obs_report
+
+    csr, _ = random_csr(rng, 48, 0.1)
+    path = tmp_path / "r.json"
+    with obs.tracing(str(path)):
+        with obs.span("outer"):
+            with obs.span("inner"):
+                CostModel(csr).best(16, config_space(16))
+    assert obs_report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "outer" in out and "inner" in out
+    assert "cost_model" in out               # decision summary
+    assert "decisions_total" in out          # counter section
+
+
+def test_obs_report_rejects_non_trace_file(tmp_path, capsys):
+    from repro.apps import obs_report
+
+    bad = tmp_path / "bad.json"
+    bad.write_text("{\"rows\": []}")
+    assert obs_report.main([str(bad)]) == 1
+    missing = tmp_path / "nope.json"
+    assert obs_report.main([str(missing)]) == 1
+
+
+# -------------------------------------------------------- env autostart
+def test_env_autostart(tmp_path, monkeypatch):
+    path = tmp_path / "env.json"
+    monkeypatch.setenv("REPRO_TRACE", str(path))
+    obs_trace._env_autostart()
+    assert obs.trace_enabled()
+    obs.instant("from_env")
+    assert obs.stop_tracing() == str(path)   # atexit re-run is a no-op
+    payload = json.loads(path.read_text())
+    assert any(e["name"] == "from_env" for e in payload["traceEvents"])
