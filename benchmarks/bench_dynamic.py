@@ -1,0 +1,182 @@
+"""Dynamic-graph benchmark: the bounded-staleness story, measured.
+
+For each graph this drives a randomized insert/delete churn stream
+through the dynamic layer (`repro.dynamic`) and reports:
+
+* **mutation throughput** — host edges/second absorbed by
+  ``DynamicPCSR`` (slack-slot vs delta-chunk split in the derived
+  field);
+* **degraded-vs-fresh gap**, priced AND measured — the engine SpMM
+  wall-clock on the churned steering arrays vs after ``repack()``,
+  next to ``degraded_kernel_cost`` / ``kernel_cost`` pricing of the
+  same two grids (the governor's decision inputs, so the artifact
+  shows whether the priced gap tracks the measured one);
+* **governor trigger points** — a second, governed stream
+  (``auto_heal=True``) recording at which step the first ``repack``
+  fired and the full action tally;
+* **decider agreement** pre/post re-pack — whether the config in use
+  is the one ``CostModel.best`` would pick for the *current* edge set.
+  Fresh graph: 1 by construction.  After churn the stale pick may
+  disagree; after the re-pack (which re-runs the pick) agreement must
+  return to the fresh-graph baseline of 1 — the acceptance number.
+
+Structured metrics feed the ``"dynamic"`` section of
+``BENCH_spmm.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.autotune import time_fn
+from repro.core.cost_model import (CostModel, degraded_kernel_cost,
+                                   pack_setup_seconds)
+from repro.core.engine import make_spmm_fn
+from repro.core.pcsr import config_space
+from repro.dynamic import DynamicGraph
+
+from .common import bench_corpus, emit
+
+DIM = 32
+GRAPHS = ("rmat10", "ba1k")     # one skewed, one power-law — small tier
+BATCHES = 6
+INSERTS = 150
+DELETES = 130
+REPS = 5
+
+
+def _churn(rng, dyn, n: int, n_ins: int, n_del: int):
+    """One random churn batch: ``n_ins`` inserts + ``n_del`` deletes of
+    existing edges (the mix that actually degrades the layout — pure
+    inserts are mostly absorbed by slack)."""
+    r = rng.integers(0, n, n_ins)
+    c = rng.integers(0, n, n_ins)
+    v = rng.uniform(0.5, 1.5, n_ins).astype(np.float32)
+    csr = dyn.to_csr()
+    rows = np.repeat(np.arange(csr.n_rows), np.diff(csr.indptr))
+    pick = rng.permutation(csr.nnz)[:n_del]
+    return (r, c, v), (rows[pick], csr.indices[pick])
+
+
+def _agreement(dyn, space) -> int:
+    """1 iff the config in use is ``CostModel.best`` for the live edges."""
+    best, _ = CostModel(dyn.to_csr()).best(DIM, space)
+    return int(best == dyn.config)
+
+
+def _measure_spmm(pcsr, B) -> float:
+    fn = make_spmm_fn(pcsr, backend="engine")
+    return time_fn(lambda: fn(B), reps=REPS, warmup=1)
+
+
+def _priced_degraded(dyn) -> float:
+    return degraded_kernel_cost(DIM, dyn.config, C=dyn.num_chunks,
+                                K=dyn.K,
+                                n_blocks_visited=dyn.n_visited_blocks).total
+
+
+def run():
+    """Churn stream per graph: throughput, degraded/fresh gap, governor
+    trigger points, pre/post-repack agreement."""
+    import jax.numpy as jnp
+
+    metrics: dict = {"dim": DIM, "batches": BATCHES,
+                     "inserts_per_batch": INSERTS,
+                     "deletes_per_batch": DELETES, "graphs": {}}
+    space = config_space(DIM)
+    for spec in bench_corpus("small"):
+        if spec.name not in GRAPHS:
+            continue
+        csr = spec.csr
+        rng = np.random.default_rng(7)
+        B = jnp.asarray(rng.standard_normal((csr.n_cols, DIM)),
+                        jnp.float32)
+
+        # ---- ungoverned stream: let the layout degrade, then repack
+        g = DynamicGraph(csr, DIM, auto_heal=False)
+        dyn = g.dyn
+        agree_fresh = _agreement(dyn, space)
+        edges = 0
+        t0 = time.perf_counter()
+        for _ in range(BATCHES):
+            (r, c, v), (dr, dc) = _churn(rng, dyn, csr.n_rows,
+                                         INSERTS, DELETES)
+            dyn.insert_edges(r, c, v)
+            dyn.delete_edges(dr, dc)
+            edges += len(r) + len(dr)
+        mutate_s = time.perf_counter() - t0
+        emit(f"dynamic/{spec.name}/mutate", mutate_s / BATCHES * 1e6,
+             f"family={spec.family};edges_per_s={edges / mutate_s:.0f};"
+             f"batches={BATCHES};"
+             f"slack_inserts={dyn.n_slack_inserts};"
+             f"delta_chunks={dyn.n_delta_chunks};"
+             f"tombstones={dyn.n_tombstones}")
+
+        agree_deg = _agreement(dyn, space)
+        deg_meas = _measure_spmm(dyn.pcsr, B)
+        deg_priced = _priced_degraded(dyn)
+        chunks_deg, fill_deg = dyn.num_chunks, dyn.slot_fill
+        slack_i, delta_c = dyn.n_slack_inserts, dyn.n_delta_chunks
+        emit(f"dynamic/{spec.name}/degraded", deg_meas * 1e6,
+             f"priced_us={deg_priced * 1e6:.1f};chunks={chunks_deg};"
+             f"slot_fill={fill_deg:.3f};agreement={agree_deg}")
+
+        t0 = time.perf_counter()
+        cfg = g.repack()                 # fresh config pick on live edges
+        repack_s = time.perf_counter() - t0
+        agree_post = _agreement(dyn, space)
+        fresh_meas = _measure_spmm(dyn.pcsr, B)
+        fresh_priced = CostModel(dyn.to_csr()).cost(DIM, cfg).total
+        emit(f"dynamic/{spec.name}/repack", repack_s * 1e6,
+             f"cfg={cfg.astuple()};measured_fresh_us={fresh_meas * 1e6:.1f};"
+             f"priced_fresh_us={fresh_priced * 1e6:.1f};"
+             f"chunks={dyn.num_chunks};"
+             f"measured_gain={deg_meas / max(fresh_meas, 1e-12):.3f};"
+             f"priced_gain={deg_priced / max(fresh_priced, 1e-12):.3f};"
+             f"priced_setup_us={pack_setup_seconds(dyn.nnz) * 1e6:.1f};"
+             f"agreement={agree_post}")
+
+        # ---- governed stream: where does the governor pull the trigger?
+        rng2 = np.random.default_rng(7)
+        gg = DynamicGraph(csr, DIM, auto_heal=True, slack=1.05,
+                          amortize_steps=10)
+        actions: list[str] = []
+        t0 = time.perf_counter()
+        for _ in range(BATCHES):
+            (r, c, v), (dr, dc) = _churn(rng2, gg.dyn, csr.n_rows,
+                                         INSERTS, DELETES)
+            gg.insert_edges(r, c, v)
+            _, dec = gg.delete_edges(dr, dc)
+            actions.append(dec.action)
+        gov_s = time.perf_counter() - t0
+        first = next((i for i, a in enumerate(actions) if a == "repack"),
+                     None)
+        tally = {a: actions.count(a) for a in ("none", "reselect", "repack")}
+        emit(f"dynamic/{spec.name}/governor",
+             gov_s / (2 * BATCHES) * 1e6,
+             f"first_repack_step={first};"
+             f"none={tally['none']};reselect={tally['reselect']};"
+             f"repack={tally['repack']};"
+             f"post_agreement={_agreement(gg.dyn, space)}")
+
+        metrics["graphs"][spec.name] = {
+            "family": spec.family,
+            "nnz": int(csr.nnz),
+            "edges_per_s": edges / mutate_s,
+            "slack_inserts": int(slack_i),
+            "delta_chunks": int(delta_c),
+            "degraded_chunks": int(chunks_deg),
+            "degraded_slot_fill": float(fill_deg),
+            "measured_degraded_us": deg_meas * 1e6,
+            "measured_fresh_us": fresh_meas * 1e6,
+            "priced_degraded_us": deg_priced * 1e6,
+            "priced_fresh_us": fresh_priced * 1e6,
+            "repack_host_us": repack_s * 1e6,
+            "governor_actions": actions,
+            "governor_first_repack_step": first,
+            "agreement_fresh": agree_fresh,
+            "agreement_degraded": agree_deg,
+            "agreement_post_repack": agree_post,
+        }
+    return metrics

@@ -24,10 +24,14 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   decider — decider retrained on calibrated       [observability extension]
            labels: decider-vs-oracle agreement
            + regret on held-out graphs
+  dynamic — mutation-stream throughput, de-       [dynamic-graph extension]
+           graded-vs-fresh priced + measured
+           gap, governor trigger points, pre/
+           post-repack decider agreement
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_spmm.json`` (default path): every emitted CSV row plus the
-fusion/dist/spmm/calibration/decider sections' structured metrics
+fusion/dist/spmm/calibration/decider/dynamic sections' structured metrics
 (kernel counts, elementwise-pass counts, per-config fused/unfused
 times, per-shard configs, overlap on/off timings, fitted coefficients
 and rank correlations, decider agreement/regret) — the perf-trajectory
@@ -64,9 +68,10 @@ def main(argv=None):
 
     from benchmarks import (bench_balancing, bench_blocking,
                             bench_calibration, bench_coarsening,
-                            bench_decider, bench_dist, bench_fusion,
-                            bench_gnn_train, bench_kernel, bench_reorder,
-                            bench_sddmm, bench_speedups, bench_spmm)
+                            bench_decider, bench_dist, bench_dynamic,
+                            bench_fusion, bench_gnn_train, bench_kernel,
+                            bench_reorder, bench_sddmm, bench_speedups,
+                            bench_spmm)
     from benchmarks.common import ROWS, emit, validate_row
 
     print("name,us_per_call,derived")
@@ -85,6 +90,7 @@ def main(argv=None):
         "spmm": bench_spmm.run,          # returns structured metrics
         "calibration": bench_calibration.run,  # returns structured metrics
         "decider": bench_decider.run_calibrated,  # returns structured
+        "dynamic": bench_dynamic.run,    # returns structured metrics
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None
@@ -102,7 +108,7 @@ def main(argv=None):
                 elif key == "table4":
                     bench_speedups.run(decider)
                 elif key in ("fusion", "dist", "spmm", "calibration",
-                             "decider"):          # structured → JSON
+                             "decider", "dynamic"):   # structured → JSON
                     extras[key] = fn()
                 else:
                     fn()

@@ -38,6 +38,9 @@ DOTTED = re.compile(r"`(repro(?:\.\w+)+)")
 # explicit list of dotted symbols the guide must mention by final name
 COVERAGE = {
     "DISTRIBUTED.md": "repro.dist",
+    # the dynamic-graph robustness surface (PR 9) — incremental PCSR,
+    # governor, per-shard refresh
+    "DYNAMIC.md": "repro.dynamic",
     # the telemetry surface (PR 8) — spans/metrics/decision log/drift
     "OBSERVABILITY.md": "repro.obs",
     # the calibration surface (PR 7) — every public symbol of the

@@ -47,15 +47,62 @@ assert any("pack_cache" in m for m in t["repro_metrics"]), \
 assert t["repro_decisions"], "no decision recorded in traced gnn run"
 EOF
 rm -f "$OBS_TRACE"
+# dynamic smoke: a churn stream against a self-healing DynamicGraph must
+# stay exact vs a full rebuild, surface a drift advisory, and trigger at
+# least one governor re-pack — all observed through the obs counters and
+# the decision log (the bounded-staleness acceptance path of the
+# dynamic-graph layer, see docs/DYNAMIC.md)
+python - <<'EOF'
+import numpy as np
+import jax.numpy as jnp
+from repro import obs
+from repro.core.engine import make_spmm_fn
+from repro.core.pcsr import build_pcsr
+from repro.data.graphs import rmat
+from repro.dynamic import DynamicGraph
+
+csr = rmat(7, 6, seed=9)
+rng = np.random.default_rng(9)
+with obs.tracing():
+    g = DynamicGraph(csr, 16, slack=1.05, amortize_steps=10,
+                     drift_threshold={"nnz": 0.05})
+    for _ in range(6):
+        r, c = rng.integers(0, csr.n_rows, (2, 150))
+        g.insert_edges(r, c, rng.uniform(0.5, 1.5, 150).astype(np.float32))
+        dcsr = g.dyn.to_csr()
+        rows = np.repeat(np.arange(dcsr.n_rows), np.diff(dcsr.indptr))
+        pick = rng.permutation(dcsr.nnz)[:140]
+        g.delete_edges(rows[pick], dcsr.indices[pick])
+    snap = obs.metrics_snapshot()
+    assert sum(snap["dynamic_mutations_total"].values()) > 0, sorted(snap)
+    assert sum(snap.get("dynamic_repacks_total", {}).values()) >= 1, \
+        "governor never re-packed under churn"
+    assert any(d.action == "repack" for d in g.decisions), \
+        [d.action for d in g.decisions]
+    assert any(d.advisory is not None for d in g.decisions), \
+        "no drift advisory fired at a 5% nnz threshold"
+# exactness after the whole governed stream: dynamic view == fresh pack
+m = g.dyn.to_csr()
+B = jnp.asarray(rng.standard_normal((m.n_cols, 16)), jnp.float32)
+fresh = build_pcsr(m.indptr, m.indices, m.data, m.n_rows, m.n_cols,
+                   g.config)
+np.testing.assert_allclose(np.asarray(g.spmm(B)),
+                           np.asarray(make_spmm_fn(fresh)(B)),
+                           rtol=1e-6, atol=1e-6)
+print("dynamic smoke: OK (repacks="
+      f"{sum(d.action == 'repack' for d in g.decisions)})")
+EOF
 # perf-trajectory artifact: measured kernel/elementwise-pass counts for
 # the fused GNN hot path + fused-vs-unfused pricing, the distributed
 # per-shard config table and overlap on/off column, the skewed-corpus
 # balanced-vs-uniform schedule smoke (priced + measured makespan), the
-# priced-vs-measured rank correlations (small tier, pre/post fit), and
-# the calibrated-decider agreement/regret table — all in one
-# machine-readable, schema-validated BENCH_spmm.json, with the whole
-# sweep traced (run.py records the trace path in the payload)
-python -m benchmarks.run --only fusion,dist,spmm,calibration,decider \
+# priced-vs-measured rank correlations (small tier, pre/post fit), the
+# calibrated-decider agreement/regret table, and the dynamic-graph churn
+# columns (degraded-vs-fresh gap, governor trigger points, pre/post-
+# repack agreement) — all in one machine-readable, schema-validated
+# BENCH_spmm.json, with the whole sweep traced (run.py records the
+# trace path in the payload)
+python -m benchmarks.run --only fusion,dist,spmm,calibration,decider,dynamic \
     --json BENCH_spmm.json --trace BENCH_trace.json
 python -m repro.apps.obs_report BENCH_trace.json --top 5
 python - <<'EOF'
@@ -63,5 +110,11 @@ import json
 p = json.load(open("BENCH_spmm.json"))
 assert p.get("trace") == "BENCH_trace.json", p.get("trace")
 assert "decider" in p and "agreement" in p["decider"], sorted(p)
+assert "dynamic" in p and p["dynamic"]["graphs"], sorted(p)
+for name, gm in p["dynamic"]["graphs"].items():
+    # acceptance: after the re-pack the config in use is again the one
+    # the model would pick fresh — agreement returns to baseline
+    assert gm["agreement_post_repack"] == gm["agreement_fresh"] == 1, \
+        (name, gm)
 EOF
 echo "ci: OK"

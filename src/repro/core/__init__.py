@@ -9,7 +9,8 @@ modules are pulled in eagerly — the JAX-importing layers (``engine``,
 """
 from .calibrate import (CalibrationResult, CalibrationSample, fit,
                         fit_columns, spearman)
-from .cost_model import (CostBreakdown, CostModel, kernel_cost, sddmm_cost,
+from .cost_model import (CostBreakdown, CostModel, degraded_kernel_cost,
+                         kernel_cost, pack_setup_seconds, sddmm_cost,
                          unfused_bytes, unfused_penalty)
 from .features import FEATURE_NAMES, MatrixFeatures, extract_features
 from .pcsr import (PCSR, PCSRStats, SpMMConfig, balanced_capacity,
@@ -22,7 +23,8 @@ __all__ = [
     "PCSR", "PCSRStats", "SpMMConfig", "balanced_capacity", "build_pcsr",
     "config_space", "pcsr_stats", "pcsr_to_coo", "slot_transfer_map",
     "transpose_csr", "transpose_pcsr",
-    "CostBreakdown", "CostModel", "kernel_cost", "sddmm_cost",
+    "CostBreakdown", "CostModel", "degraded_kernel_cost", "kernel_cost",
+    "pack_setup_seconds", "sddmm_cost",
     "unfused_bytes", "unfused_penalty",
     "CalibrationResult", "CalibrationSample", "fit", "fit_columns",
     "spearman",

@@ -42,6 +42,21 @@ STEP_OVERHEAD = 100e-9    # s per grid step not hidden by double buffering
 CHUNK_SETUP = 400e-9
 DTYPE_BYTES = 4
 
+# Re-pack amortization (the dynamic-graph governor's trade): a full PCSR
+# re-pack is host-side vectorized numpy — a fixed launch/allocation cost
+# plus a per-nonzero sort/unique throughput term.  The governor charges
+# ``pack_setup_seconds(nnz) / amortize_steps`` against the per-step
+# savings of a fresh layout, so a re-pack only fires when the degraded
+# steering arrays are slow enough to pay it back within the amortization
+# horizon.
+PACK_SETUP = 200e-6        # s fixed per pack (alloc + launch + finalize)
+PACK_SETUP_PER_NNZ = 4e-9  # s per nonzero (sort/unique/bincount passes)
+
+
+def pack_setup_seconds(nnz: int) -> float:
+    """Priced host time of one full ``build_pcsr`` re-pack."""
+    return PACK_SETUP + PACK_SETUP_PER_NNZ * max(0, int(nnz))
+
 
 @dataclass
 class CostBreakdown:
@@ -77,7 +92,8 @@ def _head_dim(dim: int, heads: int) -> int:
 
 def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
                 dtype_bytes: int = DTYPE_BYTES, *, heads: int = 1,
-                epilogue: bool = False) -> CostBreakdown:
+                epilogue: bool = False,
+                residual: bool = False) -> CostBreakdown:
     """Price one SpMM under ⟨W,F,V,S⟩ given (V,W)-matched block stats.
 
     ``heads > 1`` prices the head-tiled grid (``PCSR.steering(H)``): H× the
@@ -87,7 +103,9 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
     the same F pads a narrow per-head dim up to Dblk lanes of mostly-dead
     gather traffic.  ``epilogue=True`` adds the fused-epilogue operand
     reads (per-row scale + per-feature bias — the applied math rides the
-    VMEM-resident block for free).
+    VMEM-resident block for free); ``residual=True`` adds the dense
+    (n, d) residual-addend read — one (R, Dblk) tile per (block, j),
+    exactly mirroring the output-write traffic (GIN's ``(1+ε)h`` term).
     """
     assert stats.V == config.V and stats.W == config.W
     C, K, slots = stats.chunks_and_slots(config.S, B=config.B)
@@ -109,12 +127,59 @@ def kernel_cost(stats: PCSRStats, dim: int, config: SpMMConfig,
         bytes_meta += (n_blocks * config.R + J * n_blocks * dblk
                        ) * dtype_bytes
         flops += 3.0 * n_blocks * config.R * d_head
+    if residual:
+        # dense addend: one (R, Dblk) read per (block, j) — the same
+        # traffic as the output write
+        bytes_meta += J * n_blocks * config.R * dblk * dtype_bytes
+        flops += 1.0 * n_blocks * config.R * d_head
     return CostBreakdown(
         t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
         t_compute=flops / VPU_FLOPS,
         # chunks are revisited once per dim tile in the (J, C, K) grid, so
         # the per-chunk setup is paid J·C times — the makespan term that
         # prices the balanced schedule's slots-vs-chunks trade
+        t_overhead=steps * STEP_OVERHEAD + J * C * CHUNK_SETUP,
+        bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
+        flops=flops, steps=steps, chunk_setups=J * C)
+
+
+def degraded_kernel_cost(dim: int, config: SpMMConfig, *, C: int, K: int,
+                         n_blocks_visited: int,
+                         dtype_bytes: int = DTYPE_BYTES, heads: int = 1,
+                         epilogue: bool = False,
+                         residual: bool = False) -> CostBreakdown:
+    """Price the *actual* degraded grid a mutated ``DynamicPCSR`` runs.
+
+    ``kernel_cost`` prices the grid a fresh pack of the current matrix
+    would produce; after slack-slot inserts, tombstone deletes, and
+    appended delta chunks the live steering arrays execute a different —
+    strictly larger — grid.  This variant takes the live extents
+    directly (``C`` uncovered chunks of capacity ``K``; the distinct
+    blocks those chunks target, which is what bounds output traffic) and
+    prices the identical roofline terms, so the governor's
+    degraded-vs-fresh comparison and the calibration fit both see the
+    same feature columns as every other ``CostBreakdown``.
+    """
+    dblk = config.dblk
+    d_head = _head_dim(dim, heads)
+    J = -(-d_head // dblk)
+    C = int(C) * heads
+    n_blocks = int(n_blocks_visited) * heads
+    steps = J * C * K
+    bytes_gather = steps * dblk * dtype_bytes
+    bytes_meta = J * C * K * (config.V * 4 + 4 + 4)
+    bytes_out = J * n_blocks * config.R * dblk * dtype_bytes
+    flops = 2.0 * steps * config.V * dblk
+    if epilogue:
+        bytes_meta += (n_blocks * config.R + J * n_blocks * dblk
+                       ) * dtype_bytes
+        flops += 3.0 * n_blocks * config.R * d_head
+    if residual:
+        bytes_meta += J * n_blocks * config.R * dblk * dtype_bytes
+        flops += 1.0 * n_blocks * config.R * d_head
+    return CostBreakdown(
+        t_mem=(bytes_gather + bytes_meta + bytes_out) / HBM_BW,
+        t_compute=flops / VPU_FLOPS,
         t_overhead=steps * STEP_OVERHEAD + J * C * CHUNK_SETUP,
         bytes_gather=bytes_gather, bytes_meta=bytes_meta, bytes_out=bytes_out,
         flops=flops, steps=steps, chunk_setups=J * C)
@@ -248,10 +313,12 @@ class CostModel:
         return self._stats[key]
 
     def cost(self, dim: int, config: SpMMConfig, op: str = "spmm", *,
-             H: int = 1, epilogue: bool = False) -> CostBreakdown:
+             H: int = 1, epilogue: bool = False,
+             residual: bool = False) -> CostBreakdown:
         st = self.stats(config.V, config.W)
         if op == "spmm":
-            return kernel_cost(st, dim, config, heads=H, epilogue=epilogue)
+            return kernel_cost(st, dim, config, heads=H, epilogue=epilogue,
+                               residual=residual)
         if op == "sddmm":
             return sddmm_cost(st, dim, config, heads=H)
         raise ValueError(f"no single-kernel breakdown for op={op!r}")

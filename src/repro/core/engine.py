@@ -298,17 +298,21 @@ def make_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
 
 
 def apply_epilogue(out, scale=None, bias=None, activation: str = "none",
-                   slope: float = 0.2):
+                   slope: float = 0.2, residual=None):
     """The SpMM epilogue semantics, in plain JAX:
-    ``act(scale[:, None] ⊙ out + bias[None, :])``.  Single source of truth
-    for what the Pallas kernel's fused epilogue computes — the engine
-    backend and the per-shard distributed branches run this (XLA fuses it
-    into the surrounding program), the Pallas kernel applies the same ops
-    to the VMEM-resident output block before write-back."""
+    ``act(scale[:, None] ⊙ out + bias[None, :] + residual)``.  Single
+    source of truth for what the Pallas kernel's fused epilogue computes
+    — the engine backend and the per-shard distributed branches run this
+    (XLA fuses it into the surrounding program), the Pallas kernel
+    applies the same ops to the VMEM-resident output block before
+    write-back.  ``residual`` is a dense (n, d) addend (GIN's ``(1+ε)h``
+    term)."""
     if scale is not None:
         out = out * scale[:, None]
     if bias is not None:
         out = out + bias[None, :]
+    if residual is not None:
+        out = out + residual
     if activation == "relu":
         out = jax.nn.relu(out)
     elif activation == "leaky_relu":
@@ -334,28 +338,33 @@ def epilogue_grad(out, dOut, activation: str = "none", slope: float = 0.2):
 
 
 def engine_spmm_fused(pcsr: PCSR, B, *, scale=None, bias=None,
-                      activation: str = "none"):
-    """act(scale ⊙ (A·B) + bias) on the jit'd JAX engine — the reference
-    semantics of the fused-epilogue kernel, natively differentiable."""
-    return apply_epilogue(engine_spmm(pcsr, B), scale, bias, activation)
+                      residual=None, activation: str = "none"):
+    """act(scale ⊙ (A·B) + bias + residual) on the jit'd JAX engine — the
+    reference semantics of the fused-epilogue kernel, natively
+    differentiable."""
+    return apply_epilogue(engine_spmm(pcsr, B), scale, bias, activation,
+                          residual=residual)
 
 
 def make_fused_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
                        backend: str = "engine", interpret: bool = True):
     """Build the epilogue-fused aggregation closure
-    ``fused(B, scale=None, bias=None, activation="none") -> (n, d)``
-    computing ``act(scale ⊙ (A·B) + bias)`` — one kernel on the Pallas
-    backend (scale/bias/activation applied to the VMEM-resident output
-    block on its last visit) instead of kernel + 2–3 XLA elementwise
-    passes over the (n, d) output.
+    ``fused(B, scale=None, bias=None, activation="none", residual=None)
+    -> (n, d)`` computing ``act(scale ⊙ (A·B) + bias + residual)`` — one
+    kernel on the Pallas backend (scale/bias/residual/activation applied
+    to the VMEM-resident output block on its last visit) instead of
+    kernel + 2–3 XLA elementwise passes over the (n, d) output.  The
+    dense ``residual`` operand is what lets GIN's ``(1+ε)h + A·h``
+    aggregation run as ONE kernel.
 
-    Differentiable in ``B`` and ``bias`` (``scale`` is graph data — degree
-    norms — and is treated as a constant): with ``pcsr_t`` both backends
-    run a ``custom_vjp`` whose backward is
+    Differentiable in ``B``, ``bias``, and ``residual`` (``scale`` is
+    graph data — degree norms — and is treated as a constant): with
+    ``pcsr_t`` both backends run a ``custom_vjp`` whose backward is
 
         dpre  = dOut ⊙ act'(out)          (act' recovered from out: both
                                            relu and leaky_relu preserve sign)
         dbias = Σ_rows dpre
+        dresidual = dpre                   (the add is linear)
         dB    = SpMM(pcsrᵀ, scale ⊙ dpre)  (transpose-PCSR SpMM)
 
     — the same transpose path the plain ``make_spmm_fn`` takes, so fusing
@@ -366,69 +375,78 @@ def make_fused_spmm_fn(pcsr: PCSR, pcsr_t: Optional[PCSR] = None, *,
     if backend == "pallas":
         from repro.kernels.paramspmm.ops import paramspmm
 
-        def fwd_call(B, scale, bias, activation):
+        def fwd_call(B, scale, bias, residual, activation):
             return paramspmm(pcsr, B, scale=scale, bias=bias,
-                             activation=activation, interpret=interpret)
+                             residual=residual, activation=activation,
+                             interpret=interpret)
 
         def bwd_call(dC):
             return paramspmm(pcsr_t, dC, interpret=interpret)
     else:
-        def fwd_call(B, scale, bias, activation):
+        def fwd_call(B, scale, bias, residual, activation):
             return engine_spmm_fused(pcsr, B, scale=scale, bias=bias,
+                                     residual=residual,
                                      activation=activation)
 
         def bwd_call(dC):
             return engine_spmm(pcsr_t, dC)
 
     if backend != "pallas" and pcsr_t is None:
-        def fused(B, scale=None, bias=None, activation: str = "none"):
-            return fwd_call(B, scale, bias, activation)  # native autodiff
+        def fused(B, scale=None, bias=None, activation: str = "none",
+                  residual=None):
+            return fwd_call(B, scale, bias, residual,
+                            activation)  # native autodiff
         return fused
 
     vjps: dict = {}                # one custom_vjp per activation
 
     def _vjp(activation: str):
-        # scale/bias enter as primals (None stays a None pytree leaf) so a
-        # traced scale never leaks into the vjp closure; scale's cotangent
-        # is zero — degree norms are graph data, not a trained parameter.
+        # scale/bias/residual enter as primals (None stays a None pytree
+        # leaf) so a traced scale never leaks into the vjp closure;
+        # scale's cotangent is zero — degree norms are graph data, not a
+        # trained parameter.
         @jax.custom_vjp
-        def f(B, scale, bias):
-            return fwd_call(B, scale, bias, activation)
+        def f(B, scale, bias, residual):
+            return fwd_call(B, scale, bias, residual, activation)
 
-        def f_fwd(B, scale, bias):
-            out = fwd_call(B, scale, bias, activation)
-            return out, (out, scale, bias)
+        def f_fwd(B, scale, bias, residual):
+            out = fwd_call(B, scale, bias, residual, activation)
+            return out, (out, scale, bias, residual is not None)
 
         def f_bwd(res, dOut):
-            out, scale, bias = res
+            out, scale, bias, has_resid = res
             if pcsr_t is None:
                 raise ValueError("fused SpMM backward needs the transpose "
                                  "PCSR — build the operator with "
                                  "build_transpose=True")
             dpre = epilogue_grad(out, dOut, activation)
             dbias = None if bias is None else dpre.sum(axis=0)
+            dresid = dpre if has_resid else None
             dcb = dpre if scale is None else dpre * scale[:, None]
             dB = bwd_call(dcb)
             dscale = None if scale is None else jnp.zeros_like(scale)
-            return dB, dscale, dbias
+            return dB, dscale, dbias, dresid
 
         f.defvjp(f_fwd, f_bwd)
         return f
 
-    def fused(B, scale=None, bias=None, activation: str = "none"):
+    def fused(B, scale=None, bias=None, activation: str = "none",
+              residual=None):
         if activation not in vjps:
             vjps[activation] = _vjp(activation)
         return vjps[activation](
             B, None if scale is None else jnp.asarray(scale),
-            None if bias is None else jnp.asarray(bias))
+            None if bias is None else jnp.asarray(bias),
+            None if residual is None else jnp.asarray(residual))
     return fused
 
 
 class ParamSpMMOperator:
     """User-facing operator: holds forward + transpose PCSR for one sparse
     matrix under one ⟨W,F,V,S⟩ configuration.  ``op(B)`` is the plain
-    SpMM; ``op.fused(B, scale=, bias=, activation=)`` the epilogue-fused
-    aggregation (one kernel per GCN layer on the Pallas backend)."""
+    SpMM; ``op.fused(B, scale=, bias=, activation=, residual=)`` the
+    epilogue-fused aggregation (one kernel per GCN — or, via the
+    residual addend, GIN — layer on the Pallas backend)."""
 
     def __init__(self, csr: CSRMatrix, config: SpMMConfig, *,
                  backend: str = "engine", interpret: bool = True,

@@ -105,11 +105,28 @@ def partition_bounds(csr: CSRMatrix, n_parts: int,
 
 
 def partition_csr(csr: CSRMatrix, n_parts: int,
-                  strategy: str = "balanced") -> RowPartition:
-    """Split ``csr`` into per-shard local CSRs with halo column maps."""
+                  strategy: str = "balanced", *, starts=None,
+                  halo_pad_min: int = 1) -> RowPartition:
+    """Split ``csr`` into per-shard local CSRs with halo column maps.
+
+    ``starts`` pins explicit row boundaries instead of recomputing them —
+    the dynamic per-shard re-pack path re-slices a *mutated* graph under
+    the partition the SPMD program was compiled for, so unchanged shards
+    come out bit-identical and reusable.  ``halo_pad_min`` floors the
+    padded halo width for the same reason: as long as the mutated halos
+    still fit the old pad, every per-shard array keeps its shape and the
+    compiled programs stay valid.
+    """
     if csr.n_rows != csr.n_cols:
         raise ValueError("row partitioning expects a square adjacency")
-    starts = partition_bounds(csr, n_parts, strategy)
+    if starts is None:
+        starts = partition_bounds(csr, n_parts, strategy)
+    else:
+        starts = np.asarray(starts, np.int64)
+        if starts.shape != (n_parts + 1,) or starts[0] != 0 \
+                or starts[-1] != csr.n_rows:
+            raise ValueError(f"starts must be (n_parts+1,) boundaries "
+                             f"over [0, {csr.n_rows}]")
     rows_pad = int(np.max(np.diff(starts))) if n_parts else 0
     rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), csr.degrees)
 
@@ -122,7 +139,8 @@ def partition_csr(csr: CSRMatrix, n_parts: int,
         remote = cols[(cols < lo) | (cols >= hi)]
         halos.append(np.unique(remote))
         slices.append((lo, hi, sel))
-    halo_pad = max(1, max((h.shape[0] for h in halos), default=1))
+    halo_pad = max(1, int(halo_pad_min),
+                   max((h.shape[0] for h in halos), default=1))
 
     shards = []
     for p, (lo, hi, sel) in enumerate(slices):

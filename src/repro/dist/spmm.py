@@ -362,6 +362,18 @@ class DistGraph:
         y = self.unpad(x)
         return y.reshape(y.shape[0], H, -1).transpose(1, 0, 2)
 
+    # -------------------------------------------------------- dynamics
+    def refresh(self, new_csr: CSRMatrix, *, threshold=None):
+        """Swap in a mutated adjacency with **per-shard re-pack**: only
+        shards whose local subgraph changed rebuild their steering pack
+        (and re-pick their config when their feature snapshot drifted
+        past ``threshold``); unchanged shards keep their PCSR objects
+        and the SPMD program structure is untouched.  Returns a
+        ``repro.dynamic.ShardRefreshReport``.  See
+        ``repro.dynamic.refresh_dist_graph`` / docs/DYNAMIC.md."""
+        from repro.dynamic.dist import refresh_dist_graph
+        return refresh_dist_graph(self, new_csr, threshold=threshold)
+
     # ------------------------------------------------------- operators
     def spmm(self, B):
         """``C = A·B`` distributed; ``(n_global, d)`` in and out.

@@ -1,0 +1,33 @@
+"""Dynamic-graph robustness layer: incremental PCSR maintenance with
+drift-actuated self-healing re-pack/re-selection.
+
+Production graphs mutate under traffic; the steering arrays and the
+decider's ⟨W,F,V,S,B⟩ pick were chosen for a graph that no longer
+exists.  This package keeps SpMM/SDDMM/GAT **exact at every moment**
+while letting layout quality degrade only within priced bounds:
+
+* :class:`DynamicPCSR` — batched edge insert/delete without a full
+  re-pack (slack slots → delta chunks → tombstones; steering arrays
+  only, the kernels are untouched);
+* :class:`RepackGovernor` — prices the degraded layout against a fresh
+  pack + amortized ``pack_setup_seconds`` and consults ``check_drift``
+  to decide do-nothing / re-select F / full re-pack with config re-pick;
+* :class:`DynamicGraph` — the operator surface: mutate, auto-heal, and
+  keep calling ``spmm``/``gat``;
+* :func:`refresh_dist_graph` — the distributed path: per-shard drift
+  detection with per-shard re-pack (only changed shards rebuild).
+
+See docs/DYNAMIC.md for the layout, the governor decision table, and
+the bounded-staleness guarantee.
+"""
+from .dist import ShardRefreshReport, refresh_dist_graph, shard_drift
+from .governor import GovernorDecision, RepackGovernor
+from .graph import DynamicGraph
+from .pcsr import DynamicPCSR, MutationReport
+
+__all__ = [
+    "DynamicPCSR", "MutationReport",
+    "RepackGovernor", "GovernorDecision",
+    "DynamicGraph",
+    "refresh_dist_graph", "shard_drift", "ShardRefreshReport",
+]

@@ -1,0 +1,178 @@
+"""Per-shard drift detection + selective re-pack for ``DistGraph``.
+
+The distributed analogue of the single-device governor: a mutated
+global adjacency is re-sliced under the **same** partition boundaries
+(``partition_csr(..., starts=part.starts)``) and the same padded
+shapes (``halo_pad_min``), so
+
+* shards whose local edge set did not change come out bit-identical and
+  **reuse their existing PCSR objects** (steering caches, device copies
+  and all — asserted by identity in the tests);
+* shards whose edges changed re-pack *locally*: their steering pack is
+  rebuilt, and when the shard's feature snapshot drifted past the
+  per-feature thresholds its config is re-picked via ``CostModel.best``
+  on the new local CSR — the per-shard form of decider re-selection;
+* the halo exchange plan is recomputed (cheap host numpy) and the lazy
+  jitted SPMD closures are invalidated so they rebuild on next call.
+  The SPMD program *structure* — one ``shard_map`` over the same mesh,
+  same padded shapes — is untouched unless a mutated halo outgrows the
+  old ``halo_pad``, in which case every shard's extended column space
+  widens and all shards rebuild (reported as ``halo_pad_grew``).
+
+Entry point: ``refresh_dist_graph(g, new_csr)`` (also exposed as
+``DistGraph.refresh``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import CostModel, CSRMatrix, build_pcsr, config_space
+from repro.obs import metrics as _obs_metrics, trace as _obs_trace
+from repro.obs.decisions import (DecisionRecord, DriftAdvisory, check_drift,
+                                 graph_snapshot)
+
+
+def _same_shard_csr(a: CSRMatrix, b: CSRMatrix) -> bool:
+    return (a.nnz == b.nnz and a.n_cols == b.n_cols
+            and np.array_equal(a.indptr, b.indptr)
+            and np.array_equal(a.indices, b.indices)
+            and np.array_equal(a.data, b.data))
+
+
+def shard_drift(g, new_csr: CSRMatrix, *, threshold=None
+                ) -> dict[int, Optional[DriftAdvisory]]:
+    """Per-shard drift check of a mutated global CSR against the local
+    subgraphs ``g`` packed: re-slices ``new_csr`` under ``g``'s own
+    boundaries and compares each *changed* shard's snapshot.  Returns
+    ``{shard: advisory_or_None}`` for the changed shards only (an entry
+    with ``None`` changed without crossing any threshold)."""
+    from repro.dist.partition import partition_csr
+
+    part = g.part
+    new_part = partition_csr(new_csr, part.n_parts, part.strategy,
+                             starts=part.starts,
+                             halo_pad_min=part.halo_pad)
+    out: dict[int, Optional[DriftAdvisory]] = {}
+    for p in range(part.n_parts):
+        old_s, new_s = part.shards[p], new_part.shards[p]
+        if _same_shard_csr(old_s.csr, new_s.csr):
+            continue
+        rec = DecisionRecord(
+            source="dist_shard", op="spmm", dim=g.dim, heads=g.heads,
+            chosen=g.configs[p].astuple(), predicted_seconds=None,
+            topk=[], snapshot=graph_snapshot(old_s.csr), calibration=None)
+        out[p] = check_drift(new_s.csr, record=rec, threshold=threshold)
+    return out
+
+
+@dataclass
+class ShardRefreshReport:
+    """What one ``refresh_dist_graph`` pass rebuilt."""
+
+    changed: list = field(default_factory=list)    # shards with new edges
+    repicked: list = field(default_factory=list)   # drifted → new config
+    reused: list = field(default_factory=list)     # PCSR object kept as-is
+    advisories: dict = field(default_factory=dict)  # shard -> DriftAdvisory
+    halo_pad_grew: bool = False
+
+
+def refresh_dist_graph(g, new_csr: CSRMatrix, *, threshold=None,
+                       max_f: int = 4) -> ShardRefreshReport:
+    """Swap a mutated adjacency into a live ``DistGraph`` by re-packing
+    only the shards whose local subgraph actually changed.
+
+    Shards with unchanged edges keep their ``Shard`` and ``PCSR``
+    objects (identity-preserved); changed shards rebuild their local
+    pack under their existing config, or a freshly ``CostModel.best``-
+    picked one when their feature snapshot drifted past ``threshold``
+    (per-feature dict / scalar / ``$REPRO_DRIFT_THRESHOLD``).  Halo maps
+    are recomputed and the lazy jitted closures dropped; the partition
+    boundaries, mesh, and padded shapes survive unless ``halo_pad``
+    outgrows its old value (then every shard rebuilds — reported).
+    """
+    import jax.numpy as jnp
+
+    from repro.dist.halo import build_halo
+    from repro.dist.packing import pack_shards
+    from repro.dist.partition import partition_csr, split_local_halo
+
+    if new_csr.n_rows != g.part.n_global:
+        raise ValueError("refresh mutates edges over a fixed node set — "
+                         f"got {new_csr.n_rows} rows for a "
+                         f"{g.part.n_global}-row partition")
+    old_part = g.part
+    P = old_part.n_parts
+    rep = ShardRefreshReport()
+    with _obs_trace.span("dynamic.shard_repack", n_parts=P):
+        new_part = partition_csr(new_csr, P, old_part.strategy,
+                                 starts=old_part.starts,
+                                 halo_pad_min=old_part.halo_pad)
+        rep.halo_pad_grew = new_part.halo_pad > old_part.halo_pad
+        fwd_pcsrs = list(g._fwd.pcsrs)
+        configs = list(g.configs)
+        space = config_space(g.dim, max_f)
+        for p in range(P):
+            old_s, new_s = old_part.shards[p], new_part.shards[p]
+            if not rep.halo_pad_grew and _same_shard_csr(old_s.csr,
+                                                         new_s.csr):
+                new_part.shards[p] = old_s       # identity-preserving
+                rep.reused.append(p)
+                continue
+            rep.changed.append(p)
+            rec = DecisionRecord(
+                source="dist_shard", op="spmm", dim=g.dim, heads=g.heads,
+                chosen=configs[p].astuple(), predicted_seconds=None,
+                topk=[], snapshot=graph_snapshot(old_s.csr),
+                calibration=None)
+            adv = check_drift(new_s.csr, record=rec, threshold=threshold)
+            if adv is not None:
+                rep.advisories[p] = adv
+                configs[p], _ = CostModel(
+                    new_s.csr, calibration=g.calibration).best(
+                    g.dim, space, H=g.heads)
+                rep.repicked.append(p)
+            s = new_s.csr
+            fwd_pcsrs[p] = build_pcsr(s.indptr, s.indices, s.data,
+                                      s.n_rows, s.n_cols, configs[p])
+            _obs_metrics.counter("dist_shard_repacks_total").inc(
+                shard=p, repicked=adv is not None)
+        g.part = new_part
+        g.csr = new_csr
+        g.configs = configs
+        g.halo = build_halo(new_part)
+        g._fwd = pack_shards(fwd_pcsrs)
+        g._send_idx = jnp.asarray(g.halo.send_idx)
+        g._halo_src = jnp.asarray(g.halo.halo_src)
+        if g.overlap:
+            loc_pcsrs = list(g._loc.pcsrs)
+            halo_pcsrs = list(g._halo_pack.pcsrs)
+            for p in rep.changed:
+                loc, hal = split_local_halo(new_part.shards[p], new_part)
+                g._split_csrs[p] = (loc, hal)
+                lc, hc = g.overlap_configs[p]
+                if p in rep.repicked:
+                    lc, _ = CostModel(loc, calibration=g.calibration).best(
+                        g.dim, space, H=g.heads)
+                    hc, _ = CostModel(hal, calibration=g.calibration).best(
+                        g.dim, space, H=g.heads)
+                    g.overlap_configs[p] = (lc, hc)
+                loc_pcsrs[p] = build_pcsr(loc.indptr, loc.indices, loc.data,
+                                          loc.n_rows, loc.n_cols, lc)
+                halo_pcsrs[p] = build_pcsr(hal.indptr, hal.indices, hal.data,
+                                           hal.n_rows, hal.n_cols, hc)
+            g._loc = pack_shards(loc_pcsrs)
+            g._halo_pack = pack_shards(halo_pcsrs)
+        # drop every lazy jitted/packed cache — they close over the old
+        # steering arrays and shapes; rebuilt on next call
+        g._bwd_pack = None
+        g._bwd_split_pack = None
+        g._spmm_fn = None
+        g._gat_fns = {}
+        g._gat_packs = {}
+        g._fused_fns = {}
+        g._fused_bwd_fns = {}
+        g._bwd_fn = None
+    return rep

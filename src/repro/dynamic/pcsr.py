@@ -1,0 +1,317 @@
+"""Incremental PCSR maintenance: exact SpMM under edge mutation without
+full re-packs.
+
+``DynamicPCSR`` wraps a packed :class:`repro.core.pcsr.PCSR` and absorbs
+batched edge inserts/deletes by editing *steering arrays only* — the
+same trick the balanced ``B=True`` schedule used to change the layout
+without touching the kernel:
+
+* **slack slots** — an insert first lands in a padding slot of a chunk
+  already targeting its output block (the packed layout always carries
+  some: capacity roundup, V-padding, and previously tombstoned slots all
+  leave ``vals == 0`` holes the kernel multiplies by zero);
+* **delta chunks** — when a block has no free slot left, a fresh
+  all-padding chunk targeting that block is appended to storage.  The
+  kernel's chunk walk is unchanged: one more ``trow`` entry, one more
+  ``(V, K)`` vals tile — empty-block *birth* is just a delta chunk for a
+  block nothing targeted before;
+* **tombstones** — a delete zeroes the edge's value cell.  A vector
+  whose cells are all zero contributes exactly nothing in every path
+  (the SpMM multiplies by 0, the SDDMM masks ``vals != 0``, the GAT
+  prologue carries −inf logits on padding), so deletes are free at
+  kernel time and the slot returns to the block's free list.
+
+Storage is **append-ordered**; the kernel needs each block's chunks
+*contiguous* (the ``fini`` epilogue steering and the VMEM-revisit
+accumulation both key off grouped ``trow``), so the kernel-facing view
+is materialized lazily through a grouping permutation — chunks sorted by
+the first storage position of their block, stable within a block.  That
+preserves the base pack's emit order (ascending or LPT) and appends new
+blocks' groups at the tail: O(C log C) on the chunk count per refresh,
+never O(nnz log nnz) on the edge set.
+
+Results stay **exact at every moment** — the live arrays always encode
+precisely the mutated edge set; only layout *quality* degrades (padding
+slots accumulate, delta chunks lengthen the grid) until the governor
+(:mod:`repro.dynamic.governor`) prices a re-pack.
+
+Exactly-zero edge values are not representable (a zero cell *is* a
+padding slot — the same convention ``pcsr_to_coo`` already applies), so
+``insert_edges`` rejects them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.pcsr import PCSR, SpMMConfig, build_pcsr, pcsr_slot_coords
+from repro.core.sparse import CSRMatrix
+from repro.obs import metrics as _obs_metrics
+
+
+@dataclass
+class MutationReport:
+    """Where one batch of edge mutations landed."""
+
+    inserted: int = 0          # new edges added
+    updated: int = 0           # existing edges whose value changed
+    deleted: int = 0           # edges removed
+    slack_inserts: int = 0     # inserts absorbed by existing slots
+    delta_chunks: int = 0      # fresh chunks appended for overflow
+    tombstones: int = 0        # vectors fully zeroed by deletes
+    missing: int = 0           # deletes of edges that did not exist
+
+
+class DynamicPCSR:
+    """A PCSR that tolerates edge insert/delete batches in place.
+
+    Construct from a packed ``PCSR`` (or ``DynamicPCSR.from_csr``), call
+    ``insert_edges`` / ``delete_edges``, and read ``.pcsr`` — a normal
+    :class:`~repro.core.pcsr.PCSR` every kernel/engine path consumes
+    unchanged.  ``version`` bumps on every effective mutation so callers
+    holding jitted closures know when to rebuild.
+    """
+
+    def __init__(self, base: PCSR):
+        cfg = base.config
+        self.config: SpMMConfig = cfg
+        self.n_rows, self.n_cols = base.n_rows, base.n_cols
+        self.n_blocks, self.K = base.n_blocks, base.K
+        self.V, self.W, self.R = cfg.V, cfg.W, cfg.R
+        # storage, append-ordered: (C_s, K) steering + (C_s, V, K) vals
+        self._colidx = base.colidx.reshape(-1, base.K).copy()
+        self._lrow = base.lrow.reshape(-1, base.K).copy()
+        self._trow = base.trow.astype(np.int64).copy()
+        self._vals = base.vals.copy()
+        # edge bookkeeping: vector map (panel, col) -> (chunk, slot) and
+        # per-block free-slot lists (padding + tombstoned slots)
+        self._vec: dict[tuple[int, int], tuple[int, int]] = {}
+        self._free: dict[int, list[tuple[int, int]]] = {}
+        rows, cols, flat = pcsr_slot_coords(base)
+        c = flat // (self.V * base.K)
+        k = flat % base.K
+        occ = np.zeros((self._trow.shape[0], base.K), bool)
+        occ[c, k] = True
+        panels = rows // self.V
+        for p, col, ci, ki in zip(panels.tolist(), cols.tolist(),
+                                  c.tolist(), k.tolist()):
+            self._vec[(p, col)] = (ci, ki)
+        free_c, free_k = np.nonzero(~occ)
+        for ci, ki in zip(free_c.tolist(), free_k.tolist()):
+            self._free.setdefault(int(self._trow[ci]), []).append((ci, ki))
+        self.nnz = base.nnz
+        self.nnz_vec = len(self._vec)
+        self.base_num_chunks = base.num_chunks
+        self.version = 0
+        self.n_slack_inserts = 0
+        self.n_delta_chunks = 0
+        self.n_tombstones = 0
+        self._view: PCSR | None = None
+
+    @classmethod
+    def from_csr(cls, csr: CSRMatrix, config: SpMMConfig) -> "DynamicPCSR":
+        return cls(build_pcsr(csr.indptr, csr.indices, csr.data,
+                              csr.n_rows, csr.n_cols, config))
+
+    # ------------------------------------------------------------ stats
+    @property
+    def num_chunks(self) -> int:
+        return int(self._trow.shape[0])
+
+    @property
+    def num_slots(self) -> int:
+        return self.num_chunks * self.K
+
+    @property
+    def n_visited_blocks(self) -> int:
+        """Distinct blocks the live chunks target (bounds output traffic
+        in the degraded grid — includes fully-tombstoned blocks)."""
+        return len(np.unique(self._trow))
+
+    @property
+    def n_nonempty_blocks(self) -> int:
+        """Blocks holding at least one live vector."""
+        return len({int(self._trow[c]) for c, _ in self._vec.values()})
+
+    @property
+    def padding_ratio(self) -> float:
+        """PR_V over the live edge set (paper Eq. 2)."""
+        if self.nnz_vec == 0:
+            return 0.0
+        return 1.0 - self.nnz / (self.nnz_vec * self.V)
+
+    @property
+    def slot_fill(self) -> float:
+        """Fraction of storage slots holding a live vector — the number
+        the governor watches decay as tombstones and delta-chunk padding
+        accumulate."""
+        return self.nnz_vec / max(1, self.num_slots)
+
+    # ------------------------------------------------------- mutations
+    def _panel_of(self, row: int) -> tuple[int, int, int]:
+        panel = row // self.V
+        return panel, row - panel * self.V, panel // self.W
+
+    def _claim_slot(self, block: int) -> tuple[int, int]:
+        """A free slot in a chunk targeting ``block`` — reusing slack
+        first, appending a delta chunk only when the block is full."""
+        free = self._free.get(block)
+        if free:
+            self.n_slack_inserts += 1
+            _obs_metrics.counter("dynamic_slack_inserts_total").inc()
+            return free.pop()
+        c = self.num_chunks
+        self._colidx = np.concatenate(
+            [self._colidx, np.zeros((1, self.K), np.int32)])
+        self._lrow = np.concatenate(
+            [self._lrow, np.zeros((1, self.K), np.int32)])
+        self._trow = np.concatenate(
+            [self._trow, np.asarray([block], np.int64)])
+        self._vals = np.concatenate(
+            [self._vals, np.zeros((1, self.V, self.K), np.float32)])
+        self._free[block] = [(c, k) for k in range(self.K - 1, 0, -1)]
+        self.n_delta_chunks += 1
+        _obs_metrics.counter("dynamic_delta_chunks_total").inc()
+        return c, 0
+
+    def insert_edges(self, rows, cols, values) -> MutationReport:
+        """Insert (or update) a batch of edges.  Exact immediately: the
+        next ``.pcsr`` view encodes the new edge set bit-for-bit."""
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        values = np.asarray(values, np.float32)
+        if rows.shape != cols.shape or rows.shape != values.shape:
+            raise ValueError("rows/cols/values must match in length")
+        if (values == 0).any():
+            raise ValueError("cannot insert an edge with value exactly 0 "
+                             "(a zero cell is a padding slot)")
+        if rows.size and (rows.min() < 0 or rows.max() >= self.n_rows
+                          or cols.min() < 0 or cols.max() >= self.n_cols):
+            raise ValueError("edge endpoints out of range — the dynamic "
+                             "layer mutates edges over a fixed node set")
+        rep = MutationReport()
+        slack0, delta0 = self.n_slack_inserts, self.n_delta_chunks
+        for r, col, val in zip(rows.tolist(), cols.tolist(),
+                               values.tolist()):
+            panel, v_off, block = self._panel_of(r)
+            key = (panel, col)
+            loc = self._vec.get(key)
+            if loc is None:
+                loc = self._claim_slot(block)
+                c, k = loc
+                self._colidx[c, k] = col
+                self._lrow[c, k] = panel - block * self.W
+                self._vec[key] = loc
+                self.nnz_vec += 1
+            c, k = loc
+            if self._vals[c, v_off, k] != 0.0:
+                rep.updated += 1
+            else:
+                rep.inserted += 1
+                self.nnz += 1
+            self._vals[c, v_off, k] = val
+        rep.slack_inserts = self.n_slack_inserts - slack0
+        rep.delta_chunks = self.n_delta_chunks - delta0
+        self._committed(rep, rows.size)
+        return rep
+
+    def delete_edges(self, rows, cols) -> MutationReport:
+        """Delete a batch of edges by tombstoning their value cells.
+        Deleting a non-existent edge is counted, not an error (streams
+        replay)."""
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        rep = MutationReport()
+        for r, col in zip(rows.tolist(), cols.tolist()):
+            panel, v_off, block = self._panel_of(r)
+            key = (panel, col)
+            loc = self._vec.get(key)
+            if loc is None or self._vals[loc[0], v_off, loc[1]] == 0.0:
+                rep.missing += 1
+                continue
+            c, k = loc
+            self._vals[c, v_off, k] = 0.0
+            rep.deleted += 1
+            self.nnz -= 1
+            if not self._vals[c, :, k].any():      # whole vector gone
+                del self._vec[key]
+                self.nnz_vec -= 1
+                self.n_tombstones += 1
+                rep.tombstones += 1
+                _obs_metrics.counter("dynamic_tombstones_total").inc()
+                self._free.setdefault(block, []).append((c, k))
+        self._committed(rep, rows.size)
+        return rep
+
+    def _committed(self, rep: MutationReport, batch: int) -> None:
+        if rep.inserted or rep.updated or rep.deleted:
+            self.version += 1
+            self._view = None
+        _obs_metrics.counter("dynamic_mutations_total").inc(
+            batch, kind="insert" if rep.deleted == 0 else "delete")
+
+    # ----------------------------------------------------------- views
+    @property
+    def pcsr(self) -> PCSR:
+        """The kernel-facing grouped view (cached until next mutation)."""
+        if self._view is None:
+            C = self.num_chunks
+            first = np.full(self.n_blocks, C, np.int64)
+            np.minimum.at(first, self._trow, np.arange(C, dtype=np.int64))
+            order = np.lexsort((np.arange(C), first[self._trow]))
+            trow = self._trow[order].astype(np.int32)
+            init = np.ones(C, np.int32)
+            init[1:] = (trow[1:] != trow[:-1]).astype(np.int32)
+            self._view = PCSR(
+                self.config, self.n_rows, self.n_cols, self.n_blocks,
+                self.K, self._colidx[order].reshape(-1).copy(),
+                self._lrow[order].reshape(-1).copy(), trow, init,
+                self._vals[order].copy(), self.nnz, self.nnz_vec,
+                self.n_nonempty_blocks)
+        return self._view
+
+    def to_csr(self) -> CSRMatrix:
+        """The mutated edge set as a fresh CSR (re-pack / verify path)."""
+        if not self._vec:
+            return CSRMatrix.from_coo(
+                np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32), self.n_rows, self.n_cols)
+        locs = np.asarray([(p, col, c, k) for (p, col), (c, k)
+                           in self._vec.items()], np.int64)
+        vec_vals = self._vals[locs[:, 2], :, locs[:, 3]]      # (nv, V)
+        pan, v = np.nonzero(vec_vals)
+        rows = locs[pan, 0] * self.V + v
+        cols = locs[pan, 1]
+        return CSRMatrix.from_coo(rows, cols, vec_vals[pan, v],
+                                  self.n_rows, self.n_cols,
+                                  sum_duplicates=False)
+
+    def reselect(self, config: SpMMConfig) -> None:
+        """Swap the config *without* re-packing.  Only ``F`` (the
+        feature-dim tile width) is layout-free; the packing axes
+        ⟨V, W, S, B⟩ must match the arrays on disk."""
+        if (config.V, config.W, config.S, config.B) != \
+                (self.V, self.W, self.config.S, self.config.B):
+            raise ValueError(
+                f"reselect may only change F: layout is packed for "
+                f"{self.config.astuple()}, got {config.astuple()} — "
+                f"use repack() for V/W/S/B changes")
+        if config != self.config:
+            self.config = config
+            self.version += 1
+            self._view = None
+
+    def repack(self, config: SpMMConfig | None = None) -> PCSR:
+        """Full re-pack from the live edge set — resets every slack/
+        tombstone/delta-chunk debt (optionally under a new config) and
+        re-seats this DynamicPCSR on the fresh layout."""
+        csr = self.to_csr()
+        fresh = build_pcsr(csr.indptr, csr.indices, csr.data,
+                           csr.n_rows, csr.n_cols, config or self.config)
+        _obs_metrics.counter("dynamic_repacks_total").inc(
+            config=str((config or self.config).astuple()))
+        version = self.version
+        self.__init__(fresh)
+        self.version = version + 1
+        return fresh

@@ -27,12 +27,15 @@ Fusion (this file's reason to exist beyond the plain gather-scatter):
   while the gathered B row is being consumed — the interstitial
   elementwise normalize pass between SDDMM and SpMM disappears, making
   the GAT forward exactly TWO kernels.
-* **Epilogue** (``scale``/``bias``/``activation``): on the last ``(j, k)``
-  visit of each output block — ``fini[c] == 1 and k == K−1``, the moment
-  the completed ``(R, Dblk)`` tile is still VMEM-resident — a per-row
-  degree-norm scale, per-feature bias add, and activation are applied
-  before write-back, so a GCN aggregation step is ONE kernel instead of
-  kernel + 2–3 XLA elementwise passes over the (n, d) output.
+* **Epilogue** (``scale``/``bias``/``residual``/``activation``): on the
+  last ``(j, k)`` visit of each output block — ``fini[c] == 1 and
+  k == K−1``, the moment the completed ``(R, Dblk)`` tile is still
+  VMEM-resident — a per-row degree-norm scale, per-feature bias add,
+  dense residual add (the matching ``(R, Dblk)`` tile of a full
+  ``(n, d)`` operand — GIN's ``(1+ε)h`` term), and activation are
+  applied before write-back, so a GCN aggregation step (and a GIN
+  ``(1+ε)h + A·h`` aggregation) is ONE kernel instead of kernel + 2–3
+  XLA elementwise passes over the (n, d) output.
 
 Padding-slot safety under the prologue: a masked/padding slot carries
 logit = −inf, so exp(−inf − m) = 0 regardless of the row stats — even the
@@ -56,7 +59,7 @@ ACTIVATIONS = ("none", "relu", "leaky_relu")
 
 def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
             *refs, V: int, K: int, prologue: bool, has_scale: bool,
-            has_bias: bool, activation: str, slope: float):
+            has_bias: bool, has_resid: bool, activation: str, slope: float):
     c = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -66,6 +69,7 @@ def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
     rowsum_ref = next(it) if prologue else None
     scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
+    resid_ref = next(it) if has_resid else None
     out_ref = next(it)
 
     # First visit of this output block in this dim-tile pass → zero it.
@@ -91,7 +95,7 @@ def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
     acc = out_ref[pl.ds(row, V), :]
     out_ref[pl.ds(row, V), :] = acc + vv[:, None].astype(brow.dtype) * brow[None, :]
 
-    if has_scale or has_bias or activation != "none":
+    if has_scale or has_bias or has_resid or activation != "none":
         # Last (j, k) visit of this output block → the accumulated
         # (R, Dblk) tile is complete for this dim tile; apply the fused
         # epilogue while it is still VMEM-resident.
@@ -105,6 +109,9 @@ def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
                 y = y * sc[:, None].astype(y.dtype)
             if has_bias:
                 y = y + bias_ref[0, :][None, :].astype(y.dtype)
+            if has_resid:
+                # the residual operand's matching (R, Dblk) tile
+                y = y + resid_ref[...].astype(y.dtype)
             if activation == "relu":
                 y = jnp.maximum(y, 0.0)
             elif activation == "leaky_relu":
@@ -115,8 +122,8 @@ def _kernel(colidx_ref, lrow_ref, trow_ref, init_ref, fini_ref,  # prefetch
 def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
                      n_blocks: int, R: int, V: int, K: int, dblk: int,
                      rowmax=None, rowsum=None, scale=None, bias=None,
-                     activation: str = "none", slope: float = 0.2,
-                     interpret: bool = True):
+                     residual=None, activation: str = "none",
+                     slope: float = 0.2, interpret: bool = True):
     """Invoke the Pallas kernel on pre-padded operands.
 
     B_padded: (n_b, J·dblk).  Returns C_padded (n_blocks·R, J·dblk).
@@ -130,6 +137,10 @@ def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
       scale         — per-row epilogue scale (degree norm), packed by
                       ``ops._pack_scale``;
       bias (SUBLANES, J·dblk) — per-feature epilogue bias (row 0 real);
+      residual (n_blocks·R, J·dblk) — dense epilogue addend in the
+                      output's own padded block layout; each output
+                      block's last visit adds its matching (R, Dblk)
+                      tile (GIN's ``(1+ε)h`` term);
       activation    — "none" | "relu" | "leaky_relu" epilogue.
     """
     if activation not in ACTIVATIONS:
@@ -170,6 +181,13 @@ def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
         in_specs.append(pl.BlockSpec(
             (SUBLANES, dblk), lambda j, c, k, ci, lr, tr, it, fi: (0, j)))
         operands.append(bias)
+    if residual is not None:
+        assert residual.shape == (n_blocks * R, dim_pad), (
+            f"residual must match the padded output "
+            f"({n_blocks * R}, {dim_pad}), got {residual.shape}")
+        in_specs.append(pl.BlockSpec(
+            (R, dblk), lambda j, c, k, ci, lr, tr, it, fi: (tr[c], j)))
+        operands.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
@@ -182,12 +200,14 @@ def paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded, *,
         functools.partial(_kernel, V=V, K=K, prologue=prologue,
                           has_scale=scale is not None,
                           has_bias=bias is not None,
+                          has_resid=residual is not None,
                           activation=activation, slope=slope),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks * R, dim_pad), B_padded.dtype),
         interpret=interpret,
         name=f"paramspmm_v{V}_k{K}_r{R}_d{dblk}"
              f"{'_pro' if prologue else ''}"
+             f"{'_res' if residual is not None else ''}"
              f"{'' if activation == 'none' else '_' + activation}",
     )
     return fn(colidx, lrow, trow, init, fini, *operands)

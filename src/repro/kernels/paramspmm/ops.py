@@ -14,8 +14,9 @@ Fusion surface (see ``kernel.py``):
   computed in-register from the per-row stats.  The GAT hot path feeds
   the fused SDDMM's stats straight in: two kernels, zero interstitial
   elementwise pass.
-* ``paramspmm(..., scale=, bias=, activation=)`` — fused *epilogue*:
-  per-row degree-norm scale, per-feature bias, activation applied on the
+* ``paramspmm(..., scale=, bias=, residual=, activation=)`` — fused
+  *epilogue*: per-row degree-norm scale, per-feature bias, dense
+  residual add (GIN's ``(1+ε)h`` operand), activation applied on the
   last visit of each VMEM-resident output block.
 """
 from __future__ import annotations
@@ -53,13 +54,14 @@ def _pack_scale(x, n_blocks: int, R: int):
     "n_blocks", "R", "V", "K", "dblk", "n_rows", "dim", "activation",
     "interpret"))
 def _call(colidx, lrow, trow, init, fini, vals, B, rowmax=None, rowsum=None,
-          scale=None, bias=None, *, n_blocks, R, V, K, dblk, n_rows, dim,
-          activation="none", interpret):
+          scale=None, bias=None, residual=None, *, n_blocks, R, V, K, dblk,
+          n_rows, dim, activation="none", interpret):
     """Pallas dispatch on pre-packed (covered) steering arrays.
 
     ``scale`` is a flat per-row vector (≤ n_blocks·R entries), ``bias`` a
-    flat per-feature vector (≤ dim entries); both are padded here to the
-    kernel's tile-aligned block shapes.  ``rowmax``/``rowsum`` are the
+    flat per-feature vector (≤ dim entries), ``residual`` a dense
+    ``(≤ n_rows, dim)`` addend; all are padded here to the kernel's
+    tile-aligned block shapes.  ``rowmax``/``rowsum`` are the
     online-softmax stats from the fused SDDMM (vals = raw logits) in its
     native tile-aligned ``(n_blocks·SUBLANES, LANES)`` layout — asserted
     here so a dense ``(n_blocks, R)`` array (which only interpret mode
@@ -76,21 +78,26 @@ def _call(colidx, lrow, trow, init, fini, vals, B, rowmax=None, rowsum=None,
     if bias is not None:
         bias = jnp.pad(bias.reshape(-1), (0, dim_pad - bias.size))[None, :]
         bias = jnp.pad(bias, ((0, SUBLANES - 1), (0, 0)))   # tile-aligned
+    if residual is not None:
+        residual = jnp.pad(residual,
+                           ((0, n_blocks * R - residual.shape[0]),
+                            (0, dim_pad - residual.shape[1])))
     out = paramspmm_kernel(colidx, lrow, trow, init, fini, vals, B_padded,
                            n_blocks=n_blocks, R=R, V=V, K=K, dblk=dblk,
                            rowmax=rowmax, rowsum=rowsum, scale=scale,
-                           bias=bias, activation=activation,
-                           interpret=interpret)
+                           bias=bias, residual=residual,
+                           activation=activation, interpret=interpret)
     return out[:n_rows, :dim]
 
 
-def paramspmm(pcsr: PCSR, B, *, scale=None, bias=None,
+def paramspmm(pcsr: PCSR, B, *, scale=None, bias=None, residual=None,
               activation: str = "none", interpret: bool = True):
-    """C = act(scale ⊙ (A·B) + bias) where A is held as PCSR — the
-    epilogue operands default to the identity (plain A·B).  Pallas path
-    (interpret on CPU)."""
+    """C = act(scale ⊙ (A·B) + bias + residual) where A is held as PCSR —
+    the epilogue operands default to the identity (plain A·B).  Pallas
+    path (interpret on CPU)."""
     return paramspmm_with_vals(pcsr, None, B, scale=scale, bias=bias,
-                               activation=activation, interpret=interpret)
+                               residual=residual, activation=activation,
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -119,7 +126,7 @@ def _pad_chunk_vals(vals, n_extra: int, fill: float):
 
 
 def paramspmm_with_vals(pcsr: PCSR, vals, B, *, stats=None, scale=None,
-                        bias=None, activation: str = "none",
+                        bias=None, residual=None, activation: str = "none",
                         interpret: bool = True):
     """SpMM over A's *pattern* with per-slot values supplied at call time —
     the aggregation step of attention GNNs, where the PCSR topology is fixed
@@ -135,10 +142,12 @@ def paramspmm_with_vals(pcsr: PCSR, vals, B, *, stats=None, scale=None,
     head-tiled block; ``repro.kernels.sddmm.ops.unpack_stats`` gives the
     dense view).
 
-    ``scale``/``bias``/``activation`` enable the fused **epilogue**
-    (single-head only): per-row scale (flat, ≤ n_rows), per-feature bias
-    (flat, ≤ dim), then activation, applied inside the kernel on the last
-    visit of each output block.
+    ``scale``/``bias``/``residual``/``activation`` enable the fused
+    **epilogue** (single-head only): per-row scale (flat, ≤ n_rows),
+    per-feature bias (flat, ≤ dim), dense residual addend ((n, dim) —
+    GIN's ``(1+ε)h`` term rides the VMEM-resident output block), then
+    activation, applied inside the kernel on the last visit of each
+    output block.
 
     Multi-head: ``vals`` of shape (H, C, V, K) with ``B`` of shape
     (H, n, d) run all heads in one kernel call over head-tiled steering
@@ -157,7 +166,8 @@ def paramspmm_with_vals(pcsr: PCSR, vals, B, *, stats=None, scale=None,
     fill = -jnp.inf if stats is not None else 0.0
     rowmax, rowsum = stats if stats is not None else (None, None)
     if B.ndim == 3:                       # (H, n, d) head batch
-        if scale is not None or bias is not None or activation != "none":
+        if (scale is not None or bias is not None or residual is not None
+                or activation != "none"):
             raise NotImplementedError("epilogue fusion is single-head")
         H = B.shape[0]
         t = pcsr.steering(H, covered=True)
@@ -186,6 +196,7 @@ def paramspmm_with_vals(pcsr: PCSR, vals, B, *, stats=None, scale=None,
                  vals, B, rowmax, rowsum,
                  None if scale is None else jnp.asarray(scale),
                  None if bias is None else jnp.asarray(bias),
+                 None if residual is None else jnp.asarray(residual),
                  n_blocks=pcsr.n_blocks, R=cfg.R, V=cfg.V, K=pcsr.K,
                  dblk=cfg.dblk, n_rows=pcsr.n_rows, dim=B.shape[1],
                  activation=activation, interpret=interpret)

@@ -88,9 +88,27 @@ def init_gin(key, layer_dims, mlp_hidden_mult: int = 1):
 
 
 def gin_forward(params, X, spmm):
+    """GIN aggregation is ``(1+ε)h + A·h``.  When the aggregation closure
+    exposes a residual-capable fused epilogue (``spmm.fused(...,
+    residual=)`` — ParamSpMM / ParamSpMMOperator), the ``(1+ε)h`` term is
+    handed to the SpMM epilogue as the dense residual addend: the whole
+    aggregation is ONE kernel on the Pallas backend — the addend rides
+    the VMEM-resident output block — instead of kernel + an XLA add pass
+    over the (n, d) output."""
+    import inspect
+    fused = getattr(spmm, "fused", None)
+    if fused is not None:
+        try:
+            if "residual" not in inspect.signature(fused).parameters:
+                fused = None                # e.g. DistGraph: no residual yet
+        except (TypeError, ValueError):
+            fused = None
     h = X
     for i, layer in enumerate(params):
-        agg = (1.0 + layer["eps"]) * h + spmm(h)       # (1+ε)h + A·h
+        if fused is not None:
+            agg = fused(h, residual=(1.0 + layer["eps"]) * h)
+        else:
+            agg = (1.0 + layer["eps"]) * h + spmm(h)   # (1+ε)h + A·h
         z = jax.nn.relu(agg @ layer["w1"] + layer["b1"])
         h = z @ layer["w2"] + layer["b2"]
         if i < len(params) - 1:

@@ -21,7 +21,7 @@ from repro.obs.metrics import (
 from repro.obs.decisions import (
     DecisionRecord, DriftAdvisory, DRIFT_FEATURES, DRIFT_THRESHOLD,
     record_decision, decision_log, clear_decisions,
-    graph_snapshot, check_drift,
+    graph_snapshot, check_drift, resolve_drift_thresholds,
 )
 from repro.obs.trace import _env_autostart
 
@@ -35,7 +35,7 @@ __all__ = [
     # decisions
     "DecisionRecord", "DriftAdvisory", "DRIFT_FEATURES", "DRIFT_THRESHOLD",
     "record_decision", "decision_log", "clear_decisions",
-    "graph_snapshot", "check_drift",
+    "graph_snapshot", "check_drift", "resolve_drift_thresholds",
 ]
 
 _env_autostart()

@@ -27,7 +27,7 @@ from repro.obs import metrics as _metrics, trace as _trace
 __all__ = [
     "DecisionRecord", "DriftAdvisory", "DRIFT_FEATURES", "DRIFT_THRESHOLD",
     "record_decision", "decision_log", "clear_decisions",
-    "graph_snapshot", "check_drift",
+    "graph_snapshot", "check_drift", "resolve_drift_thresholds",
 ]
 
 _LOCK = threading.Lock()
@@ -38,8 +38,48 @@ _LOG: list["DecisionRecord"] = []
 #: drop-in snapshots).
 DRIFT_FEATURES = ("n", "nnz", "d", "d_max", "cv", "rho", "pr_2")
 
-#: Relative change in any ``DRIFT_FEATURES`` entry that trips an advisory.
+#: Default relative change in a ``DRIFT_FEATURES`` entry that trips an
+#: advisory.  Per-feature overrides: pass ``check_drift`` a
+#: ``{feature: threshold}`` dict, or set ``REPRO_DRIFT_THRESHOLD`` to a
+#: scalar (``"0.1"``) or a comma list (``"nnz=0.1,cv=0.5"``).
 DRIFT_THRESHOLD = 0.25
+
+#: Environment hook consulted when ``check_drift`` is called without an
+#: explicit threshold.
+DRIFT_THRESHOLD_ENV = "REPRO_DRIFT_THRESHOLD"
+
+
+def resolve_drift_thresholds(threshold=None) -> dict:
+    """Normalize a threshold spec into a full ``{feature: float}`` map.
+
+    ``threshold`` may be a scalar (applied to every feature), a partial
+    ``{feature: float}`` dict (unlisted features keep ``DRIFT_THRESHOLD``),
+    or ``None`` — which consults ``$REPRO_DRIFT_THRESHOLD``: either a
+    scalar float string or a comma-separated ``feature=value`` list,
+    falling back to ``DRIFT_THRESHOLD`` when unset.  Unknown feature
+    names raise (a typo'd override silently never firing is worse than
+    an error).
+    """
+    if threshold is None:
+        import os
+        spec = os.environ.get(DRIFT_THRESHOLD_ENV, "").strip()
+        if not spec:
+            threshold = DRIFT_THRESHOLD
+        elif "=" in spec:
+            threshold = {}
+            for item in spec.split(","):
+                name, _, val = item.partition("=")
+                threshold[name.strip()] = float(val)
+        else:
+            threshold = float(spec)
+    if isinstance(threshold, dict):
+        unknown = set(threshold) - set(DRIFT_FEATURES)
+        if unknown:
+            raise ValueError(f"unknown drift feature(s) {sorted(unknown)} "
+                             f"— valid: {DRIFT_FEATURES}")
+        return {name: float(threshold.get(name, DRIFT_THRESHOLD))
+                for name in DRIFT_FEATURES}
+    return {name: float(threshold) for name in DRIFT_FEATURES}
 
 
 @dataclass
@@ -174,21 +214,25 @@ def clear_decisions() -> None:
 
 
 def check_drift(csr, record: Optional[DecisionRecord] = None, *,
-                threshold: float = DRIFT_THRESHOLD
-                ) -> Optional[DriftAdvisory]:
+                threshold=None) -> Optional[DriftAdvisory]:
     """Compare ``csr``'s current stats against the feature snapshot a
     decision was made on (default: the most recent logged record).
     Returns a ``DriftAdvisory`` when any ``DRIFT_FEATURES`` entry moved
-    by more than ``threshold`` relative — the signal to re-run config
-    selection / re-pack — else ``None``.  Pure comparison: works whether
-    or not tracing is currently enabled (the advisory counter/event only
-    fire when it is)."""
+    by more than its threshold relative — the signal to re-run config
+    selection / re-pack — else ``None``.  ``threshold`` accepts a
+    scalar, a per-feature dict, or ``None`` (the
+    ``$REPRO_DRIFT_THRESHOLD`` env hook / ``DRIFT_THRESHOLD`` default —
+    see ``resolve_drift_thresholds``); each drifted entry records the
+    threshold that fired it.  Pure comparison: works whether or not
+    tracing is currently enabled (the advisory counter/event only fire
+    when it is)."""
     if record is None:
         log = decision_log()
         if not log:
             raise ValueError("no decision recorded — nothing to check "
                              "drift against")
         record = log[-1]
+    thresholds = resolve_drift_thresholds(threshold)
     current = graph_snapshot(csr)
     drifted = {}
     for name in DRIFT_FEATURES:
@@ -196,12 +240,14 @@ def check_drift(csr, record: Optional[DecisionRecord] = None, *,
             continue
         old, new = float(record.snapshot[name]), float(current[name])
         rel = abs(new - old) / max(abs(old), 1e-12)
-        if rel > threshold:
-            drifted[name] = {"recorded": old, "current": new, "rel": rel}
+        if rel > thresholds[name]:
+            drifted[name] = {"recorded": old, "current": new, "rel": rel,
+                             "threshold": thresholds[name]}
     if not drifted:
         return None
     moved = ", ".join(f"{k} {v['recorded']:.3g}→{v['current']:.3g} "
-                      f"({v['rel']:+.0%})" for k, v in drifted.items())
+                      f"({v['rel']:+.0%} > {v['threshold']:.0%})"
+                      for k, v in drifted.items())
     msg = (f"input drifted since the {record.source} pick of "
            f"{record.chosen} (op={record.op}, dim={record.dim}): {moved} "
            f"— re-run config selection / re-pack")

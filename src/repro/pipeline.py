@@ -29,8 +29,9 @@ class ParamSpMM:
     4-head layer can pick a different ⟨W,F,V,S⟩ than a single-head one.
 
     The wrapped operator exposes the fusion surface: ``p(B)`` is the plain
-    SpMM, ``p.fused(B, scale=, bias=, activation=)`` the epilogue-fused
-    aggregation (one kernel per GCN layer on the Pallas backend).
+    SpMM, ``p.fused(B, scale=, bias=, activation=, residual=)`` the
+    epilogue-fused aggregation (one kernel per GCN — or, via the residual
+    addend, GIN — layer on the Pallas backend).
     """
 
     def __init__(self, csr: CSRMatrix, dim: int, *,
@@ -82,6 +83,9 @@ class ParamSpMM:
     def __call__(self, B):
         return self.op(B)
 
-    def fused(self, B, scale=None, bias=None, activation: str = "none"):
-        """Epilogue-fused aggregation: act(scale ⊙ (A·B) + bias)."""
-        return self.op.fused(B, scale=scale, bias=bias, activation=activation)
+    def fused(self, B, scale=None, bias=None, activation: str = "none",
+              residual=None):
+        """Epilogue-fused aggregation:
+        act(scale ⊙ (A·B) + bias + residual)."""
+        return self.op.fused(B, scale=scale, bias=bias,
+                             activation=activation, residual=residual)

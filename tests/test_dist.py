@@ -584,3 +584,117 @@ def test_dist_train_gnn_multihead_gat():
                     heads=2, partitions=2)
     assert isinstance(res.config, list) and len(res.config) == 2
     assert res.losses[-1] < res.losses[0]
+
+
+# --------------------------------------- dynamic per-shard refresh (PR 9)
+def _mutate_shard_rows(csr, part, rng, shard, n_new=10):
+    """Add edges whose rows AND columns live inside one shard's row
+    range — only that shard's local edge slice changes, and no halo can
+    grow."""
+    lo, hi = int(part.starts[shard]), int(part.starts[shard + 1])
+    A = csr.to_dense()
+    r = rng.integers(lo, hi, n_new)
+    c = rng.integers(lo, hi, n_new)
+    A[r, c] = rng.random(n_new).astype(np.float32) + 0.5
+    return CSRMatrix.from_dense(A.astype(np.float32))
+
+
+def test_refresh_reuses_unchanged_shards_identity(rng):
+    """Host-side plan contract: a mutation confined to one shard leaves
+    every other shard's Shard AND PCSR objects identity-preserved, the
+    partition boundaries pinned, and the padded shapes unchanged."""
+    csr = rmat(8, 6, seed=11)
+    g = DistGraph(csr, 16, 4, strategy="balanced")
+    old_shards = list(g.part.shards)
+    old_pcsrs = list(g._fwd.pcsrs)
+    old_starts = g.part.starts.copy()
+    old_shape = (g.part.rows_pad, g.part.halo_pad)
+    new_csr = _mutate_shard_rows(csr, g.part, rng, shard=1)
+    rep = g.refresh(new_csr)
+    assert rep.changed == [1]
+    assert set(rep.reused) == {0, 2, 3}
+    assert not rep.halo_pad_grew
+    for p in rep.reused:
+        assert g.part.shards[p] is old_shards[p]       # identity, not copy
+        assert g._fwd.pcsrs[p] is old_pcsrs[p]
+    assert g._fwd.pcsrs[1] is not old_pcsrs[1]
+    np.testing.assert_array_equal(g.part.starts, old_starts)
+    assert (g.part.rows_pad, g.part.halo_pad) == old_shape
+    assert g.csr is new_csr
+    # node set is fixed — a different row count is a re-partition, not
+    # a refresh
+    with pytest.raises(ValueError, match="fixed node set"):
+        g.refresh(rmat(7, 6, seed=1))
+
+
+def test_shard_drift_reports_changed_shards_only(rng):
+    from repro.dynamic import shard_drift
+
+    csr = rmat(8, 6, seed=3)
+    g = DistGraph(csr, 16, 4, strategy="balanced")
+    assert shard_drift(g, csr) == {}               # no change → no entries
+    new_csr = _mutate_shard_rows(csr, g.part, rng, shard=2, n_new=6)
+    out = shard_drift(g, new_csr)
+    assert set(out) == {2}                         # only the mutated shard
+    # a tight threshold turns the entry into a real advisory
+    out_tight = shard_drift(g, new_csr, threshold=1e-6)
+    assert out_tight[2] is not None and out_tight[2].drifted
+
+
+@needs_mesh
+def test_refresh_dist_spmm_matches_engine_after_mutation(rng):
+    """End-to-end per-shard self-healing: after refresh the SPMD SpMM
+    matches the single-device engine on the MUTATED graph, including a
+    drift-triggered per-shard config re-pick observed via obs counters."""
+    from repro import obs
+
+    csr = rmat(8, 7, seed=9)
+    dim = 16
+    g = DistGraph(csr, dim, 4, strategy="balanced")
+    _ = dist_spmm(g, jnp.zeros((csr.n_rows, dim), jnp.float32))  # warm
+    new_csr = _mutate_shard_rows(csr, g.part, rng, shard=0, n_new=40)
+    obs.reset_metrics()
+    with obs.tracing():
+        rep = g.refresh(new_csr, threshold=1e-6)   # force the re-pick path
+        snap = obs.metrics_snapshot()
+    obs.stop_tracing()
+    assert rep.changed == [0] and rep.repicked == [0]
+    assert 0 in rep.advisories
+    assert sum(snap["dist_shard_repacks_total"].values()) == 1
+    B = jnp.asarray(rng.standard_normal((csr.n_rows, dim)), jnp.float32)
+    cfg, _ = CostModel(new_csr).best(dim, config_space(dim))
+    ref = engine_spmm(build_pcsr(new_csr.indptr, new_csr.indices,
+                                 new_csr.data, new_csr.n_rows,
+                                 new_csr.n_cols, cfg), B)
+    _dist_tol(dist_spmm(g, B), ref)
+    # grads flow through the refreshed transpose path too
+    gd = jax.grad(lambda b: (dist_spmm(g, b) ** 2).sum())(B)
+    t = new_csr.transpose()
+    pt = build_pcsr(t.indptr, t.indices, t.data, t.n_rows, t.n_cols, cfg)
+    ref_fn = make_spmm_fn(build_pcsr(new_csr.indptr, new_csr.indices,
+                                     new_csr.data, new_csr.n_rows,
+                                     new_csr.n_cols, cfg), pt)
+    gr = jax.grad(lambda b: (ref_fn(b) ** 2).sum())(B)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(gr),
+                               rtol=2e-3, atol=2e-4)
+
+
+@needs_mesh
+def test_refresh_overlap_mode_rebuilds_changed_split_packs(rng):
+    csr = rmat(8, 6, seed=21)
+    dim = 12
+    g = DistGraph(csr, dim, 4, strategy="balanced", overlap=True)
+    _ = dist_spmm(g, jnp.zeros((csr.n_rows, dim), jnp.float32))
+    old_loc = list(g._loc.pcsrs)
+    new_csr = _mutate_shard_rows(csr, g.part, rng, shard=3, n_new=12)
+    rep = g.refresh(new_csr)
+    assert rep.changed == [3]
+    for p in rep.reused:
+        assert g._loc.pcsrs[p] is old_loc[p]
+    assert g._loc.pcsrs[3] is not old_loc[3]
+    B = jnp.asarray(rng.standard_normal((csr.n_rows, dim)), jnp.float32)
+    cfg, _ = CostModel(new_csr).best(dim, config_space(dim))
+    ref = engine_spmm(build_pcsr(new_csr.indptr, new_csr.indices,
+                                 new_csr.data, new_csr.n_rows,
+                                 new_csr.n_cols, cfg), B)
+    _dist_tol(dist_spmm(g, B), ref)

@@ -1,0 +1,375 @@
+"""Dynamic-graph robustness layer (repro.dynamic): incremental PCSR
+maintenance must stay BIT-exact under any insert/delete/re-pack stream
+(slack slots, delta chunks, tombstones, empty-block birth/death, fat-row
+growth), the governor must auto-trigger re-packs once priced degradation
+crosses the slack threshold (observed through obs counters + decision
+log), and ``reselect`` may only ever change the layout-free F axis.
+
+Bit-exactness strategy: integer-valued float32 edge weights and
+features — float32 adds of small integers are exact in any order, so a
+degraded layout and a fresh pack must produce *identical* bits, not
+merely close ones."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import _propcheck as pc
+
+from repro import obs
+from repro.core import CostModel, CSRMatrix, SpMMConfig, build_pcsr, \
+    config_space
+from repro.core.cost_model import degraded_kernel_cost, kernel_cost, \
+    pack_setup_seconds, pcsr_stats
+from repro.core.engine import engine_spmm, make_gat_message_fn, make_spmm_fn
+from repro.dynamic import DynamicGraph, DynamicPCSR, RepackGovernor
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    if obs.trace_enabled():                            # pragma: no cover
+        obs.stop_tracing()
+    obs.reset_metrics()
+    obs.clear_decisions()
+    yield
+    if obs.trace_enabled():
+        obs.stop_tracing()
+    obs.reset_metrics()
+    obs.clear_decisions()
+
+
+def _int_csr(rng, n, density=0.12):
+    """Integer-valued adjacency → order-independent float32 sums."""
+    A = ((rng.random((n, n)) < density)
+         * rng.integers(1, 8, (n, n))).astype(np.float32)
+    return CSRMatrix.from_dense(A), A
+
+
+def _int_feats(rng, n, d):
+    return jnp.asarray(rng.integers(-3, 4, (n, d)), jnp.float32)
+
+
+def _fresh_spmm(csr, config, B):
+    p = build_pcsr(csr.indptr, csr.indices, csr.data,
+                   csr.n_rows, csr.n_cols, config)
+    return np.asarray(engine_spmm(p, B))
+
+
+def _edges_of(csr):
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), csr.degrees)
+    return rows, csr.indices
+
+
+def _mutate(rng, dyn, n, step):
+    """One randomized mutation batch: insert / delete / full re-pack."""
+    op = int(rng.integers(0, 4))
+    if op == 3 and step > 0:
+        dyn.repack()
+        return
+    if op == 2 and dyn.nnz:
+        rows, cols = _edges_of(dyn.to_csr())
+        m = min(int(rng.integers(1, 16)), rows.size)
+        pick = rng.choice(rows.size, size=m, replace=False)
+        dyn.delete_edges(rows[pick], cols[pick])
+        return
+    m = int(rng.integers(1, 24))
+    dyn.insert_edges(rng.integers(0, n, m), rng.integers(0, n, m),
+                     rng.integers(1, 8, m).astype(np.float32))
+
+
+# ----------------------------------------------- bit-exact mutation stream
+@pytest.mark.parametrize("case", pc.propcases(
+    5, n=pc.integers(16, 48), density=pc.floats(0.04, 0.2),
+    v=pc.sampled_from([1, 2]), s=pc.booleans(), b=pc.booleans(),
+    seed=pc.integers(0, 99)), ids=str)
+def test_mutation_stream_spmm_bit_exact_vs_fresh_pack(case):
+    """The tentpole acceptance bar: after ANY randomized sequence of
+    insert/delete/re-pack batches, the degraded view's SpMM is
+    bit-identical to a from-scratch ``build_pcsr`` of the mutated CSR —
+    on the engine backend at every step, on Pallas at the end."""
+    rng = np.random.default_rng(case.seed)
+    csr, _ = _int_csr(rng, case.n, case.density)
+    cfg = SpMMConfig(V=case.v, S=case.s, W=8 // case.v,
+                     B=case.b and case.s)        # B=True requires S=True
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    B = _int_feats(rng, case.n, 9)
+    for step in range(7):
+        _mutate(rng, dyn, case.n, step)
+        view = dyn.pcsr
+        # grouped-trow invariant: each block's chunks are contiguous
+        trow = view.trow
+        changes = int((np.diff(trow) != 0).sum())
+        assert changes == len(set(trow.tolist())) - 1
+        np.testing.assert_array_equal(
+            np.asarray(engine_spmm(view, B)),
+            _fresh_spmm(dyn.to_csr(), cfg, B))
+    # the Pallas kernel consumes the same degraded view unchanged
+    from repro.kernels.paramspmm.ops import paramspmm
+    np.testing.assert_array_equal(
+        np.asarray(paramspmm(dyn.pcsr, B, interpret=True)),
+        _fresh_spmm(dyn.to_csr(), cfg, B))
+
+
+def test_empty_block_birth_and_death(rng):
+    """Inserting into a never-targeted block appends a delta chunk for it
+    (birth); deleting a block's last edge tombstones it without removing
+    the chunk — both stay exact and the CSR round-trips."""
+    n = 64
+    A = np.zeros((n, n), np.float32)
+    A[:16] = (rng.random((16, n)) < 0.3) * rng.integers(1, 5, (16, n))
+    csr = CSRMatrix.from_dense(A.astype(np.float32))
+    cfg = SpMMConfig(V=2, S=True, W=4)
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    blocks0 = dyn.n_visited_blocks
+    B = _int_feats(rng, n, 8)
+    # birth: rows 40..47 live in blocks nothing targeted at pack time
+    dyn.insert_edges([40, 41, 47], [3, 9, 60], [2.0, 3.0, 1.0])
+    assert dyn.n_visited_blocks > blocks0
+    assert dyn.n_delta_chunks >= 1
+    np.testing.assert_array_equal(np.asarray(engine_spmm(dyn.pcsr, B)),
+                                  _fresh_spmm(dyn.to_csr(), cfg, B))
+    # death: delete every edge of row band 0..7 (its block empties)
+    rows, cols = _edges_of(dyn.to_csr())
+    sel = rows < 8
+    dyn.delete_edges(rows[sel], cols[sel])
+    out = np.asarray(engine_spmm(dyn.pcsr, B))
+    np.testing.assert_array_equal(out,
+                                  _fresh_spmm(dyn.to_csr(), cfg, B))
+    assert (out[:8] == 0).all()
+    # round-trip: the mutated edge set is what to_csr says it is
+    back = dyn.to_csr()
+    assert back.nnz == dyn.nnz
+    np.testing.assert_array_equal(dyn.repack().n_rows, n)
+    np.testing.assert_array_equal(np.asarray(engine_spmm(dyn.pcsr, B)),
+                                  _fresh_spmm(back, cfg, B))
+
+
+def test_fat_row_growth_spills_into_delta_chunks(rng):
+    """A row outgrowing its packed capacity keeps spilling into appended
+    delta chunks — exact throughout, and the governor's live extents see
+    the growth."""
+    n = 48
+    csr, _ = _int_csr(rng, n, 0.05)
+    cfg = SpMMConfig(V=1, S=True, W=8)
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    chunks0, B = dyn.num_chunks, _int_feats(rng, n, 6)
+    cols = rng.permutation(n)[:40]
+    dyn.insert_edges(np.full(40, 3), cols,
+                     rng.integers(1, 6, 40).astype(np.float32))
+    assert dyn.n_delta_chunks > 0 and dyn.num_chunks > chunks0
+    np.testing.assert_array_equal(np.asarray(engine_spmm(dyn.pcsr, B)),
+                                  _fresh_spmm(dyn.to_csr(), cfg, B))
+
+
+def test_gat_exact_on_degraded_layout(rng):
+    """The fused GAT message over a degraded view matches the same
+    message over a fresh pack of the mutated CSR (tight tolerance —
+    softmax is not bit-stable across summation orders)."""
+    n = 40
+    csr, _ = _int_csr(rng, n, 0.1)
+    cfg = SpMMConfig(V=2, S=True, W=4)
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    for step in range(4):
+        _mutate(rng, dyn, n, 0)        # step=0 → no repack: stay degraded
+    assert dyn.n_slack_inserts + dyn.n_delta_chunks + dyn.n_tombstones > 0
+    cur = dyn.to_csr()
+    fresh = build_pcsr(cur.indptr, cur.indices, cur.data, n, n, cfg)
+    Q = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    Vf = jnp.asarray(rng.standard_normal((n, 5)), jnp.float32)
+    for backend in ("engine", "pallas"):
+        out = make_gat_message_fn(dyn.pcsr, backend=backend)(Q, K, Vf)
+        ref = make_gat_message_fn(fresh, backend=backend)(Q, K, Vf)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------ API contracts
+def test_insert_rejects_zero_values_and_out_of_range(rng):
+    csr, _ = _int_csr(rng, 16)
+    dyn = DynamicPCSR.from_csr(csr, SpMMConfig(V=1, S=False, W=8))
+    with pytest.raises(ValueError, match="value exactly 0"):
+        dyn.insert_edges([1], [2], [0.0])
+    with pytest.raises(ValueError, match="fixed node set"):
+        dyn.insert_edges([16], [2], [1.0])
+    with pytest.raises(ValueError, match="match in length"):
+        dyn.insert_edges([1, 2], [3], [1.0])
+
+
+def test_delete_missing_is_counted_not_raised(rng):
+    csr, _ = _int_csr(rng, 16)
+    dyn = DynamicPCSR.from_csr(csr, SpMMConfig(V=1, S=False, W=8))
+    rep = dyn.delete_edges([0, 1], [0, 1])
+    assert rep.missing + rep.deleted == 2
+    v0 = dyn.version
+    rep2 = dyn.delete_edges([0], [0])          # replayed delete: now gone
+    assert rep2.missing == 1 and rep2.deleted == 0
+    # an all-missing batch must not bump the version (no re-traces)
+    assert dyn.version == v0
+
+
+def test_mutation_report_counts_slack_vs_delta(rng):
+    csr, _ = _int_csr(rng, 32, 0.08)
+    dyn = DynamicPCSR.from_csr(csr, SpMMConfig(V=2, S=True, W=4))
+    m = 30
+    rng2 = np.random.default_rng(7)
+    rep = dyn.insert_edges(rng2.integers(0, 32, m),
+                           rng2.integers(0, 32, m),
+                           rng2.integers(1, 5, m).astype(np.float32))
+    assert rep.inserted + rep.updated == m
+    assert rep.slack_inserts == dyn.n_slack_inserts   # per-batch == total
+    assert rep.delta_chunks == dyn.n_delta_chunks
+    # update-in-place does not claim a slot
+    rows, cols = _edges_of(dyn.to_csr())
+    rep2 = dyn.insert_edges(rows[:5], cols[:5],
+                            np.full(5, 7.0, np.float32))
+    assert rep2.updated == 5 and rep2.slack_inserts == 0
+
+
+def test_reselect_only_changes_f(rng):
+    csr, _ = _int_csr(rng, 32, 0.1)
+    cfg = SpMMConfig(V=2, S=True, W=4, F=1)
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    with pytest.raises(ValueError, match="only change F"):
+        dyn.reselect(SpMMConfig(V=1, S=True, W=8, F=1))
+    with pytest.raises(ValueError, match="only change F"):
+        dyn.reselect(SpMMConfig(V=2, S=False, W=4, F=1))
+    v0 = dyn.version
+    dyn.reselect(SpMMConfig(V=2, S=True, W=4, F=2))
+    assert dyn.config.F == 2 and dyn.version == v0 + 1
+    assert dyn.pcsr.config.F == 2
+    B = _int_feats(rng, 32, 9)
+    np.testing.assert_array_equal(
+        np.asarray(engine_spmm(dyn.pcsr, B)),
+        _fresh_spmm(dyn.to_csr(), cfg, B))
+
+
+def test_repack_clears_layout_debt(rng):
+    csr, _ = _int_csr(rng, 40, 0.1)
+    dyn = DynamicPCSR.from_csr(csr, SpMMConfig(V=2, S=True, W=4))
+    for _ in range(3):
+        _mutate(rng, dyn, 40, 0)
+    v0 = dyn.version
+    dyn.repack()
+    assert dyn.version == v0 + 1
+    assert dyn.n_delta_chunks == 0 and dyn.n_tombstones == 0
+    # a fresh pack of the same edge set has the same slot count
+    fresh = DynamicPCSR.from_csr(dyn.to_csr(), dyn.config)
+    assert dyn.num_chunks == fresh.num_chunks
+
+
+# -------------------------------------------------- governor + pricing
+def test_degraded_cost_matches_kernel_cost_on_fresh_layout(rng):
+    """On an unmutated layout the degraded pricing must agree with
+    ``kernel_cost`` of the same stats — same roofline, same features."""
+    csr, _ = _int_csr(rng, 64, 0.1)
+    cfg = SpMMConfig(V=2, S=True, W=4)
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    st = pcsr_stats(csr.indptr, csr.indices, 64, 64, cfg.V, cfg.W)
+    a = kernel_cost(st, 32, cfg)
+    b = degraded_kernel_cost(32, cfg, C=dyn.num_chunks, K=dyn.K,
+                             n_blocks_visited=dyn.n_visited_blocks)
+    assert b.steps == a.steps and b.total == pytest.approx(a.total)
+    # and degradation strictly raises the priced time
+    dyn.insert_edges(np.full(30, 1), np.arange(30),
+                     np.ones(30, np.float32))
+    worse = degraded_kernel_cost(32, cfg, C=dyn.num_chunks, K=dyn.K,
+                                 n_blocks_visited=dyn.n_visited_blocks)
+    assert worse.total >= b.total
+    assert pack_setup_seconds(csr.nnz) > pack_setup_seconds(0) > 0
+
+
+def test_governor_auto_repack_under_churn_with_counters(rng):
+    """End-to-end bounded staleness: a churn stream degrades the layout
+    until the priced gap exceeds slack, the governor fires a re-pack
+    (visible in obs counters + the decision log), and every SpMM along
+    the way is bit-exact."""
+    n = 96
+    csr, _ = _int_csr(rng, n, 0.06)
+    B = _int_feats(rng, n, 16)
+    with obs.tracing():
+        g = DynamicGraph(csr, 16, slack=1.05, amortize_steps=10)
+        for step in range(6):
+            m = 150
+            g.insert_edges(rng.integers(0, n, m), rng.integers(0, n, m),
+                           rng.integers(1, 5, m).astype(np.float32))
+            rows, cols = _edges_of(g.dyn.to_csr())
+            pick = rng.choice(rows.size, size=min(140, rows.size),
+                              replace=False)
+            g.delete_edges(rows[pick], cols[pick])
+            np.testing.assert_array_equal(
+                np.asarray(g.spmm(B)),
+                _fresh_spmm(g.dyn.to_csr(), g.config, B))
+        actions = [d.action for d in g.decisions]
+        assert "repack" in actions, actions
+        snap = obs.metrics_snapshot()
+        assert sum(snap["dynamic_repacks_total"].values()) >= 1
+        assert sum(snap["governor_decisions_total"].values()) \
+            == len(actions)
+        assert "dynamic_mutations_total" in snap
+        log = [d for d in obs.decision_log() if d.source == "governor"]
+        assert any(d.snapshot["action"] == "repack" for d in log)
+    # post-repack the governor is rebaselined: an untouched graph idles
+    dec = g.governor.evaluate(g.dyn, g.config)
+    assert dec.action == "none"
+
+
+def test_governor_advisory_only_when_auto_heal_off(rng):
+    n = 64
+    csr, _ = _int_csr(rng, n, 0.06)
+    g = DynamicGraph(csr, 16, slack=1.0, amortize_steps=1000,
+                     auto_heal=False)
+    for _ in range(3):
+        m = 120
+        g.insert_edges(rng.integers(0, n, m), rng.integers(0, n, m),
+                       rng.integers(1, 5, m).astype(np.float32))
+        rows, cols = _edges_of(g.dyn.to_csr())
+        pick = rng.choice(rows.size, size=110, replace=False)
+        g.delete_edges(rows[pick], cols[pick])
+    assert any(d.action == "repack" for d in g.decisions)
+    # advisory-only: the layout debt was NOT cleared
+    assert g.dyn.n_tombstones + g.dyn.n_delta_chunks \
+        + g.dyn.n_slack_inserts > 0
+    # manual heal returns the layout to a fresh pack
+    B = _int_feats(rng, n, 16)
+    g.repack()
+    assert g.dyn.n_tombstones == 0 and g.dyn.n_delta_chunks == 0
+    np.testing.assert_array_equal(
+        np.asarray(g.spmm(B)),
+        _fresh_spmm(g.dyn.to_csr(), g.config, B))
+
+
+def test_governor_fast_path_and_threshold_plumbing(rng):
+    """No drift + within slack → 'none' without a config sweep; the
+    per-feature drift threshold reaches ``check_drift`` through the
+    governor."""
+    csr, _ = _int_csr(rng, 48, 0.1)
+    cfg, _ = CostModel(csr).best(16, config_space(16))
+    dyn = DynamicPCSR.from_csr(csr, cfg)
+    gov = RepackGovernor(16, slack=1.25, amortize_steps=100,
+                         drift_threshold={"nnz": 10.0})
+    gov.rebaseline(dyn, cfg)
+    dec = gov.evaluate(dyn, cfg)
+    assert dec.action == "none" and dec.advisory is None
+    # one tiny insert: still within slack, still quiet
+    dyn.insert_edges([0], [1], [1.0])
+    assert gov.evaluate(dyn, cfg).action == "none"
+
+
+def test_dynamic_graph_versioned_closure_rebuild(rng):
+    """Jitted closures capture steering arrays at build time — the graph
+    must rebuild them when (and only when) the version moves."""
+    n = 32
+    csr, _ = _int_csr(rng, n, 0.1)
+    g = DynamicGraph(csr, 8, auto_heal=False)
+    B = _int_feats(rng, n, 8)
+    out0 = np.asarray(g.spmm(B))
+    fn0 = g._spmm_fn
+    _ = g.spmm(B)
+    assert g._spmm_fn is fn0                  # no version move → cached
+    g.insert_edges([0], [n - 1], [3.0])
+    out1 = np.asarray(g.spmm(B))
+    assert g._spmm_fn is not fn0              # rebuilt after mutation
+    np.testing.assert_array_equal(out1,
+                                  _fresh_spmm(g.dyn.to_csr(), g.config, B))
+    assert not np.array_equal(out0, out1)

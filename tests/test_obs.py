@@ -274,3 +274,45 @@ def test_env_autostart(tmp_path, monkeypatch):
     assert obs.stop_tracing() == str(path)   # atexit re-run is a no-op
     payload = json.loads(path.read_text())
     assert any(e["name"] == "from_env" for e in payload["traceEvents"])
+
+
+# ------------------------------------------- configurable drift thresholds
+def test_resolve_drift_thresholds_scalar_dict_env(monkeypatch):
+    r = obs_decisions.resolve_drift_thresholds
+    monkeypatch.delenv(obs_decisions.DRIFT_THRESHOLD_ENV, raising=False)
+    # default: every feature at DRIFT_THRESHOLD
+    assert r() == {f: obs_decisions.DRIFT_THRESHOLD
+                   for f in obs_decisions.DRIFT_FEATURES}
+    # scalar broadcast
+    assert r(0.5) == {f: 0.5 for f in obs_decisions.DRIFT_FEATURES}
+    # partial dict overrides ride on the default base
+    t = r({"nnz": 0.05, "cv": 2.0})
+    assert t["nnz"] == 0.05 and t["cv"] == 2.0
+    assert t["d_max"] == obs_decisions.DRIFT_THRESHOLD
+    with pytest.raises(ValueError, match="unknown drift feature"):
+        r({"not_a_feature": 0.1})
+    # env hook: scalar form, then per-feature list form
+    monkeypatch.setenv(obs_decisions.DRIFT_THRESHOLD_ENV, "0.4")
+    assert r()["nnz"] == 0.4
+    monkeypatch.setenv(obs_decisions.DRIFT_THRESHOLD_ENV,
+                       "nnz=0.02, cv=1.5")
+    t = r()
+    assert t["nnz"] == 0.02 and t["cv"] == 1.5
+    assert t["rho"] == obs_decisions.DRIFT_THRESHOLD
+    # an explicit argument beats the env
+    assert r(0.9)["nnz"] == 0.9
+
+
+def test_check_drift_per_feature_threshold_and_advisory_record(rng):
+    csr, _ = random_csr(rng, 64, 0.05)
+    with obs.tracing():
+        CostModel(csr).best(32, config_space(32))
+    mutated = _densified(csr, rng)
+    # a sky-high nnz threshold silences the nnz advisory dimension
+    loose = obs_decisions.check_drift(mutated, threshold={"nnz": 100.0})
+    assert loose is None or "nnz" not in loose.drifted
+    # a tight one fires, and the advisory records WHICH threshold fired
+    adv = obs_decisions.check_drift(mutated, threshold={"nnz": 0.01})
+    assert adv is not None and "nnz" in adv.drifted
+    assert adv.drifted["nnz"]["threshold"] == 0.01
+    assert "1%" in adv.message                 # the fired bound, printed
