@@ -1,0 +1,91 @@
+"""Serving latency/throughput under seeded load replay (serving tier).
+
+Drives the ``repro.serve`` request path — sample → extract → bucket pack
+(cached steering) → fused forward — with the same seeded bursty
+synthetic stream the soak test replays, and reports:
+
+  serve/<graph>/<model>/p50      p50 request latency (µs)
+  serve/<graph>/<model>/p99      p99 request latency (µs)
+  serve/<graph>/<model>/request  mean service time per request (µs), with
+                                 throughput (requests/s), steering-pack
+                                 cache hit rate, and compiled-bucket count
+                                 in the derived field
+
+plus a structured dict (``run.py --json`` folds it into BENCH_spmm.json
+as the ``serve`` section).  Latency percentiles include queueing inside
+a tick window (requests waiting for their batch), so p99 ≫ p50 is the
+batching tradeoff, not noise.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _one(graph_name, csr, *, model, backend, n_requests, seed,
+         tick_every, feat=16, hidden=32, classes=8):
+    import jax
+
+    from repro.models.gnn import init_gat, init_gcn
+    from repro.serve import GNNService, replay, synthetic_stream
+
+    g = csr if model == "gat" else csr.gcn_normalize()
+    rng = np.random.default_rng(seed)
+    feats = rng.integers(0, 4, (g.n_rows, feat)).astype(np.float32)
+    init = init_gat if model == "gat" else init_gcn
+    params = init(jax.random.PRNGKey(seed), [feat, hidden, classes])
+
+    stream = synthetic_stream(n_requests, g.n_rows, seed=seed)
+    svc = GNNService(g, feats, params, model=model, backend=backend)
+    t0 = time.perf_counter()
+    results = replay(svc, stream, tick_every=tick_every)
+    wall = time.perf_counter() - t0
+
+    lat_us = np.array([r.latency_s for r in results]) * 1e6
+    p50, p99 = float(np.percentile(lat_us, 50)), float(np.percentile(lat_us, 99))
+    rps = len(results) / wall
+    cache = svc.cache
+    base = f"serve/{graph_name}/{model}"
+    tag = (f"model={model};backend={backend};requests={len(results)};"
+           f"batches={len(svc.batch_log)};tick_every={tick_every}")
+    emit(f"{base}/p50", p50, tag)
+    emit(f"{base}/p99", p99, tag)
+    emit(f"{base}/request", wall * 1e6 / len(results),
+         f"{tag};throughput_rps={rps:.1f};"
+         f"hit_rate={cache.hit_rate:.3f};hits={cache.hits};"
+         f"misses={cache.misses};compiled_buckets={svc.compiled_buckets}")
+    return {
+        "graph": graph_name, "model": model, "backend": backend,
+        "requests": len(results), "batches": len(svc.batch_log),
+        "tick_every": tick_every,
+        "latency_us_p50": p50, "latency_us_p99": p99,
+        "throughput_rps": rps,
+        "cache_hits": cache.hits, "cache_misses": cache.misses,
+        "cache_hit_rate": cache.hit_rate,
+        "compiled_buckets": svc.compiled_buckets,
+    }
+
+
+def run(n_requests: int = 48, seed: int = 0, tick_every: int = 8):
+    """Latency/throughput sweep on the serve corpus (engine backend —
+    interpret-mode Pallas wall-clock would measure the interpreter, not
+    the serving tier)."""
+    from repro.data.graphs import corpus
+
+    specs = {s.name: s for s in corpus("serve")}
+    runs = []
+    for graph_name, model in (("rmat13", "gcn"), ("ba10k", "gcn"),
+                              ("ba10k", "gat")):
+        runs.append(_one(graph_name, specs[graph_name].csr, model=model,
+                         backend="engine", n_requests=n_requests,
+                         seed=seed, tick_every=tick_every))
+    return {"runs": runs,
+            "stream": {"requests": n_requests, "seed": seed,
+                       "tick_every": tick_every}}
+
+
+if __name__ == "__main__":
+    run()

@@ -28,10 +28,14 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
            graded-vs-fresh priced + measured
            gap, governor trigger points, pre/
            post-repack decider agreement
+  serve  — request-serving p50/p99 latency +      [serving tier]
+           throughput under seeded load replay,
+           steering-pack cache hit rate
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_spmm.json`` (default path): every emitted CSV row plus the
-fusion/dist/spmm/calibration/decider/dynamic sections' structured metrics
+fusion/dist/spmm/calibration/decider/dynamic/serve sections' structured
+metrics
 (kernel counts, elementwise-pass counts, per-config fused/unfused
 times, per-shard configs, overlap on/off timings, fitted coefficients
 and rank correlations, decider agreement/regret) — the perf-trajectory
@@ -70,8 +74,8 @@ def main(argv=None):
                             bench_calibration, bench_coarsening,
                             bench_decider, bench_dist, bench_dynamic,
                             bench_fusion, bench_gnn_train, bench_kernel,
-                            bench_reorder, bench_sddmm, bench_speedups,
-                            bench_spmm)
+                            bench_reorder, bench_sddmm, bench_serve,
+                            bench_speedups, bench_spmm)
     from benchmarks.common import ROWS, emit, validate_row
 
     print("name,us_per_call,derived")
@@ -91,6 +95,7 @@ def main(argv=None):
         "calibration": bench_calibration.run,  # returns structured metrics
         "decider": bench_decider.run_calibrated,  # returns structured
         "dynamic": bench_dynamic.run,    # returns structured metrics
+        "serve": bench_serve.run,        # returns structured metrics
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     decider = None
@@ -108,7 +113,7 @@ def main(argv=None):
                 elif key == "table4":
                     bench_speedups.run(decider)
                 elif key in ("fusion", "dist", "spmm", "calibration",
-                             "decider", "dynamic"):   # structured → JSON
+                             "decider", "dynamic", "serve"):  # → JSON
                     extras[key] = fn()
                 else:
                     fn()

@@ -41,6 +41,9 @@ COVERAGE = {
     # the dynamic-graph robustness surface (PR 9) — incremental PCSR,
     # governor, per-shard refresh
     "DYNAMIC.md": "repro.dynamic",
+    # the inference serving surface (PR 10) — request path, shape
+    # buckets, steering-pack cache
+    "SERVING.md": "repro.serve",
     # the telemetry surface (PR 8) — spans/metrics/decision log/drift
     "OBSERVABILITY.md": "repro.obs",
     # the calibration surface (PR 7) — every public symbol of the

@@ -92,6 +92,23 @@ np.testing.assert_allclose(np.asarray(g.spmm(B)),
 print("dynamic smoke: OK (repacks="
       f"{sum(d.action == 'repack' for d in g.decisions)})")
 EOF
+# serve smoke: a seeded bursty stream through the serving driver with
+# per-request full-pipeline verification (--check) — asserts the
+# bucketed forward is exact, the steering-pack cache gets hits on a
+# replayed workload, and the compiled-bucket count stays below the
+# batch count (the zero-recompile acceptance path, see docs/SERVING.md)
+SERVE_STATS="$(mktemp /tmp/serve_smoke.XXXXXX.json)"
+python -m repro.apps.serve_gnn --graph ba10k --requests 16 --check \
+    --stats "$SERVE_STATS"
+python - "$SERVE_STATS" <<'EOF'
+import json, sys
+s = json.load(open(sys.argv[1]))
+assert s["checked"] == s["requests"] == 16, s
+assert s["cache_hits"] > 0, "no steering-pack cache hits on the stream"
+assert s["cache_hits"] + s["cache_misses"] == s["batches"], s
+assert 0 < s["compiled_buckets"] <= len(s["buckets"]) < s["batches"], s
+EOF
+rm -f "$SERVE_STATS"
 # perf-trajectory artifact: measured kernel/elementwise-pass counts for
 # the fused GNN hot path + fused-vs-unfused pricing, the distributed
 # per-shard config table and overlap on/off column, the skewed-corpus
@@ -99,10 +116,12 @@ EOF
 # priced-vs-measured rank correlations (small tier, pre/post fit), the
 # calibrated-decider agreement/regret table, and the dynamic-graph churn
 # columns (degraded-vs-fresh gap, governor trigger points, pre/post-
-# repack agreement) — all in one machine-readable, schema-validated
-# BENCH_spmm.json, with the whole sweep traced (run.py records the
-# trace path in the payload)
-python -m benchmarks.run --only fusion,dist,spmm,calibration,decider,dynamic \
+# repack agreement), plus the serving tier's p50/p99 latency,
+# throughput, and steering-pack cache hit rate under seeded replay —
+# all in one machine-readable, schema-validated BENCH_spmm.json, with
+# the whole sweep traced (run.py records the trace path in the payload)
+python -m benchmarks.run \
+    --only fusion,dist,spmm,calibration,decider,dynamic,serve \
     --json BENCH_spmm.json --trace BENCH_trace.json
 python -m repro.apps.obs_report BENCH_trace.json --top 5
 python - <<'EOF'
@@ -111,6 +130,10 @@ p = json.load(open("BENCH_spmm.json"))
 assert p.get("trace") == "BENCH_trace.json", p.get("trace")
 assert "decider" in p and "agreement" in p["decider"], sorted(p)
 assert "dynamic" in p and p["dynamic"]["graphs"], sorted(p)
+assert "serve" in p and p["serve"]["runs"], sorted(p)
+for run in p["serve"]["runs"]:
+    assert run["latency_us_p99"] >= run["latency_us_p50"] > 0, run
+    assert 0.0 <= run["cache_hit_rate"] <= 1.0, run
 for name, gm in p["dynamic"]["graphs"].items():
     # acceptance: after the re-pack the config in use is again the one
     # the model would pick fresh — agreement returns to baseline

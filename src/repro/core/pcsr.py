@@ -340,7 +340,8 @@ def balanced_capacity(counts, lam: float = BALANCE_LAMBDA,
 
 
 def build_pcsr(indptr, indices, data, n_rows, n_cols,
-               config: SpMMConfig, unbalanced_cap: int = UNBALANCED_CAP) -> PCSR:
+               config: SpMMConfig, unbalanced_cap: int = UNBALANCED_CAP,
+               capacity: int | None = None) -> PCSR:
     """PCSR generation (paper §4.2), fully vectorized.
 
     ``config.B`` selects the nnz-balanced packer: capacity from
@@ -352,23 +353,29 @@ def build_pcsr(indptr, indices, data, n_rows, n_cols,
     contiguous.  Downstream machinery only relies on *grouped* ``trow``
     (``fini``/consecutive-revisit accumulation), never on ascending
     order, so the schedule needs no kernel change.
+
+    ``capacity`` pins the chunk capacity ``K`` (sublane-rounded) instead
+    of deriving it from the matrix — the serving tier uses this so every
+    graph packed into one shape bucket shares the bucket's fixed chunk
+    geometry (and therefore one compiled kernel).
     """
     if not _obs_trace.trace_enabled():
         return _build_pcsr(indptr, indices, data, n_rows, n_cols,
-                           config, unbalanced_cap)
+                           config, unbalanced_cap, capacity)
     with _obs_trace.span("pcsr.build", config=str(config.astuple()),
                          n_rows=int(n_rows),
                          nnz=int(np.asarray(indices).shape[0])):
         t0 = perf_counter()
         p = _build_pcsr(indptr, indices, data, n_rows, n_cols,
-                        config, unbalanced_cap)
+                        config, unbalanced_cap, capacity)
         _obs_metrics.histogram("pack_build_seconds").observe(
             perf_counter() - t0, config=str(config.astuple()))
     return p
 
 
 def _build_pcsr(indptr, indices, data, n_rows, n_cols,
-                config: SpMMConfig, unbalanced_cap: int) -> PCSR:
+                config: SpMMConfig, unbalanced_cap: int,
+                capacity: int | None = None) -> PCSR:
     V, W, S, Bal = config.V, config.W, config.S, config.B
     indptr = np.asarray(indptr, np.int64)
     indices = np.asarray(indices, np.int64)
@@ -386,7 +393,9 @@ def _build_pcsr(indptr, indices, data, n_rows, n_cols,
         else np.zeros(n_blocks, np.int64)
     nonempty = int((counts > 0).sum())
 
-    if Bal:
+    if capacity is not None:
+        K = max(SUBLANES, _round_up(capacity, SUBLANES))
+    elif Bal:
         K = balanced_capacity(counts, unbalanced_cap=unbalanced_cap)
     elif S:
         K = split_granularity(nv, nonempty)
@@ -435,6 +444,74 @@ def _build_pcsr(indptr, indices, data, n_rows, n_cols,
     vals[chunk_g[:, None], np.arange(V)[None, :], slot[:, None]] = vec_val
     return PCSR(config, n_rows, n_cols, n_blocks, K, colidx, lrow,
                 trow, init, vals, nnz, nv, nonempty)
+
+
+def pad_pcsr(p: PCSR, *, n_rows: int, n_cols: int | None = None,
+             num_chunks: int | None = None) -> PCSR:
+    """Pad a PCSR to a fixed bucket shape (serving tier).
+
+    Returns a PCSR whose geometry is exactly ``(n_rows, n_cols,
+    num_chunks)`` regardless of the input graph, so every request packed
+    into one shape bucket produces bit-identical steering-array *shapes*
+    — the precondition for one compiled kernel per bucket.  Three kinds
+    of chunks are appended after the real ones (prefix property — the
+    original chunks come first, verbatim):
+
+    1. one all-padding *coverage* chunk per empty block (``init=1``,
+       ascending block id) — the same chunks ``steering(covered=True)``
+       would synthesize, materialized eagerly so the padded PCSR has
+       **zero** empty blocks and covered == uncovered steering;
+    2. ``num_chunks - C - E`` *filler* chunks (``init=0``, all padding)
+       targeting the last empty block — they re-visit an already-zeroed
+       block and accumulate nothing, bringing the chunk count to the
+       bucket ceiling.
+
+    The grouped-``trow`` invariant is preserved (filler directly follows
+    its block's coverage chunk), so the lazily recomputed ``fini`` fires
+    the fused epilogue exactly once per block.  Row padding relies on the
+    caller leaving headroom: callers must size ``n_rows`` so at least one
+    block is empty whenever filler is needed (the serve bucket geometry
+    adds one always-empty trailing block for exactly this).
+    """
+    cfg = p.config
+    n_cols = n_rows if n_cols is None else n_cols
+    if n_rows < p.n_rows or n_cols < p.n_cols:
+        raise ValueError(
+            f"pad_pcsr target ({n_rows}x{n_cols}) smaller than "
+            f"packed matrix ({p.n_rows}x{p.n_cols})")
+    n_panels = max(1, _round_up(n_rows, cfg.V) // cfg.V)
+    n_blocks = max(1, _round_up(n_panels, cfg.W) // cfg.W)
+    covered = np.unique(p.trow.astype(np.int64))
+    empty = np.setdiff1d(np.arange(n_blocks, dtype=np.int64), covered)
+    E = int(empty.size)
+    C = p.num_chunks
+    target = C + E if num_chunks is None else int(num_chunks)
+    filler = target - C - E
+    if filler < 0:
+        raise ValueError(
+            f"pad_pcsr chunk budget {target} < required {C + E} "
+            f"(C={C} real + E={E} coverage)")
+    if filler > 0 and E == 0:
+        raise ValueError(
+            "pad_pcsr needs an empty block to host filler chunks — "
+            "size the bucket with at least one spare row block")
+    pad = E + filler
+    if pad == 0:
+        out = PCSR(cfg, n_rows, n_cols, n_blocks, p.K, p.colidx, p.lrow,
+                   p.trow, p.init, p.vals, p.nnz, p.nnz_vec,
+                   p.n_nonempty_blocks)
+        return out
+    trow_pad = np.concatenate(
+        [empty, np.full(filler, empty[-1] if E else 0, np.int64)])
+    trow = np.concatenate([p.trow, trow_pad.astype(np.int32)])
+    init = np.concatenate(
+        [p.init, np.ones(E, np.int32), np.zeros(filler, np.int32)])
+    colidx = np.concatenate([p.colidx, np.zeros(pad * p.K, np.int32)])
+    lrow = np.concatenate([p.lrow, np.zeros(pad * p.K, np.int32)])
+    vals = np.concatenate(
+        [p.vals, np.zeros((pad, cfg.V, p.K), np.float32)])
+    return PCSR(cfg, n_rows, n_cols, n_blocks, p.K, colidx, lrow,
+                trow, init, vals, p.nnz, p.nnz_vec, p.n_nonempty_blocks)
 
 
 @dataclass

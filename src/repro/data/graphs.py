@@ -152,6 +152,74 @@ def kregular(n: int, k: int, seed: int = 0, shuffle: bool = False) -> CSRMatrix:
                    shuffle, seed)
 
 
+# --------------------------------------------------------------- serving
+def sample_khop(csr: CSRMatrix, seeds, fanouts, *, seed: int = 0) -> np.ndarray:
+    """Seeded k-hop neighborhood with per-hop fanout caps (GraphSAGE-style).
+
+    Hop ``i`` expands the current frontier by at most ``fanouts[i]``
+    neighbors per frontier node, sampled *without replacement* via a
+    vectorized sort-by-(node, random) + positional mask — no Python loop
+    over nodes.  Deterministic in ``seed``: the serving tier's replay
+    soak relies on same-seed → same node set.  Returns the sorted unique
+    node ids of the sampled neighborhood (seeds always included, even
+    seeds with empty neighborhoods).
+    """
+    rng = np.random.default_rng(seed)
+    visited = np.unique(np.asarray(seeds, np.int64))
+    if visited.size and (visited[0] < 0 or visited[-1] >= csr.n_rows):
+        raise ValueError("seed node id out of range")
+    frontier = visited
+    for fan in fanouts:
+        if frontier.size == 0 or fan <= 0:
+            break
+        starts = csr.indptr[frontier]
+        counts = csr.indptr[frontier + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        seg_off = np.cumsum(counts) - counts
+        flat = np.arange(total, dtype=np.int64)
+        pos = flat - np.repeat(seg_off, counts) + np.repeat(starts, counts)
+        nbrs = csr.indices[pos]
+        seg = np.repeat(np.arange(frontier.size, dtype=np.int64), counts)
+        order = np.lexsort((rng.random(total), seg))   # shuffle within node
+        rank = flat - np.repeat(seg_off, counts)       # 0.. within node
+        picked = nbrs[order][rank < fan]               # first ``fan`` each
+        new = np.setdiff1d(np.unique(picked), visited, assume_unique=True)
+        visited = np.union1d(visited, new)
+        frontier = new
+    return visited
+
+
+def extract_subgraph(csr: CSRMatrix, nodes) -> CSRMatrix:
+    """Induced subgraph on ``nodes`` with local id relabeling.
+
+    ``nodes`` must be sorted unique global ids (what ``sample_khop``
+    returns); local id ``i`` is the position of ``nodes[i]``.  Edges with
+    either endpoint outside ``nodes`` are dropped.  Vectorized CSR
+    range-gather — no per-node Python loop.
+    """
+    nodes = np.asarray(nodes, np.int64)
+    m = int(nodes.size)
+    if m == 0:
+        return CSRMatrix(np.zeros(1, np.int64), np.zeros(0, np.int64),
+                         np.zeros(0, np.float32), 0, 0)
+    lookup = np.full(csr.n_cols, -1, np.int64)
+    lookup[nodes] = np.arange(m, dtype=np.int64)
+    starts = csr.indptr[nodes]
+    counts = csr.indptr[nodes + 1] - starts
+    total = int(counts.sum())
+    seg_off = np.cumsum(counts) - counts
+    flat = np.arange(total, dtype=np.int64)
+    pos = flat - np.repeat(seg_off, counts) + np.repeat(starts, counts)
+    cols_l = lookup[csr.indices[pos]]
+    rows_l = np.repeat(np.arange(m, dtype=np.int64), counts)
+    keep = cols_l >= 0
+    return CSRMatrix.from_coo(rows_l[keep], cols_l[keep],
+                              csr.data[pos][keep], m, m,
+                              sum_duplicates=False)
+
+
 @dataclass
 class GraphSpec:
     name: str
@@ -199,6 +267,16 @@ def corpus(scale: str = "small") -> list[GraphSpec]:
         add("clones1k", "cocitation", clones(1000, 10, seed=15))
         add("kreg2k", "uniform", kregular(2000, 8, seed=16))
         add("grid48", "mesh", grid2d(48, seed=17))
+        return out
+
+    if scale == "serve":
+        # Serving-tier base graphs: big enough that sampled subgraphs
+        # span several shape buckets, small enough for CI smoke streams.
+        add("rmat13", "powerlaw", rmat(13, 8, seed=31))
+        add("ba10k", "powerlaw", ba(10_000, 4, seed=32))
+        add("sbm32x256", "community", sbm(32, 256, 0.12, 1.0, seed=33))
+        add("er20k", "uniform", er(20_000, 6, seed=34))
+        add("grid128", "mesh", grid2d(128, seed=35))
         return out
 
     if scale == "small":

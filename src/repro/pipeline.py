@@ -14,6 +14,30 @@ from .core.engine import ParamSpMMOperator
 from .core.reorder import rabbit_reorder, apply_reorder
 
 
+def pick_config(csr: CSRMatrix, dim: int, *,
+                decider: Optional[SpMMDecider] = None,
+                select: str = "model",
+                op: str = "spmm",
+                heads: int = 1) -> SpMMConfig:
+    """Phase-1 configuration prediction, shared by every entry point.
+
+    Resolution order: ``decider`` prediction > measured oracle search
+    (``select="measured"``) > cost-model sweep over ``config_space``.
+    ``ParamSpMM`` uses it per matrix; the serving tier
+    (``repro.serve``) calls it once per shape bucket and amortizes the
+    pick across every request the bucket ever serves.
+    """
+    if decider is not None:
+        return decider.predict(extract_features(csr), dim)
+    if select == "measured":
+        # autotune for THIS host (the paper's oracle measures on the
+        # deployment GPU; on CPU the TPU model mispredicts)
+        from .core.autotune import oracle_search
+        return oracle_search(csr, dim, mode="measured", reps=2).best_config
+    config, _ = CostModel(csr).best(dim, config_space(dim), op=op, H=heads)
+    return config
+
+
 class ParamSpMM:
     """End-to-end adaptive SpMM for one sparse matrix and embedding dim.
 
@@ -64,17 +88,8 @@ class ParamSpMM:
         self.csr = csr
         self.dim = dim
         if config is None:
-            if decider is not None:
-                config = decider.predict(extract_features(csr), dim)
-            elif select == "measured":
-                # autotune for THIS host (the paper's oracle measures on
-                # the deployment GPU; on CPU the TPU model mispredicts)
-                from .core.autotune import oracle_search
-                config = oracle_search(csr, dim, mode="measured",
-                                       reps=2).best_config
-            else:
-                config, _ = CostModel(csr).best(dim, config_space(dim),
-                                                op=op, H=heads)
+            config = pick_config(csr, dim, decider=decider, select=select,
+                                 op=op, heads=heads)
         self.config = config
         self.op = ParamSpMMOperator(csr, config, backend=backend,
                                     interpret=interpret,

@@ -1,0 +1,25 @@
+"""GNN inference serving tier (docs/SERVING.md).
+
+Request path: seed node ids → seeded fanout-capped k-hop sampling →
+induced-subgraph extraction with local relabeling → shape-bucket PCSR
+pack (padded to the bucket ceiling) → fused GCN/GIN/GAT forward —
+with dynamic request batching into pre-compiled shape buckets and a
+bucket-keyed steering-pack cache amortizing the decider/cost-model
+config pick.  The graph-side counterpart of ``repro.launch.serve``'s
+prefill+decode LM path.
+"""
+from .batcher import (RequestBatcher, SampledRequest, SubgraphRequest,
+                      synthetic_stream)
+from .bucket import (BucketPolicy, PackGeom, ShapeBucket, pack_subgraph,
+                     steering_arrays)
+from .cache import BucketPack, SteeringPackCache
+from .forward import bucket_forward, reference_forward
+from .service import GNNService, RequestResult, replay
+
+__all__ = [
+    "ShapeBucket", "BucketPolicy", "PackGeom", "pack_subgraph",
+    "steering_arrays", "BucketPack", "SteeringPackCache",
+    "SubgraphRequest", "SampledRequest", "RequestBatcher",
+    "synthetic_stream", "bucket_forward", "reference_forward",
+    "GNNService", "RequestResult", "replay",
+]

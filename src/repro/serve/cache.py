@@ -1,0 +1,91 @@
+"""Bucket-keyed steering-pack cache.
+
+A cache entry (``BucketPack``) is everything request-independent about a
+bucket: the decider/cost-model-picked ⟨W,F,V,S,B⟩ config and the static
+``PackGeom`` derived from it.  The pick runs ONCE per bucket — on the
+first batch that lands in it, using that batch's union subgraph as the
+feature source — and is then amortized across every request the bucket
+ever serves (the compiled forward is keyed on the same ``PackGeom``, so
+a cache hit also means a jit cache hit).
+
+Hits/misses/evictions are tracked in plain attributes (always on, the
+bench reads them) and mirrored into ``repro.obs`` counters
+(``serve_cache_hits_total`` / ``serve_cache_misses_total`` /
+``serve_cache_evictions_total``) when tracing is active.  Capacity-bounded
+LRU: evicting a bucket drops its config pick, not correctness — the next
+miss re-picks.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+from repro.core.pcsr import SpMMConfig
+from repro.core.sparse import CSRMatrix
+from repro.obs import metrics as _metrics
+
+from .bucket import PackGeom, ShapeBucket
+
+
+@dataclass(frozen=True)
+class BucketPack:
+    """Amortized per-bucket state: the picked config + static geometry."""
+
+    bucket: ShapeBucket
+    config: SpMMConfig
+    geom: PackGeom
+
+
+class SteeringPackCache:
+    """LRU cache ``ShapeBucket → BucketPack``.
+
+    ``dim`` is the widest layer of the served model (the config pick's
+    embedding-dim argument); ``op`` steers the cost model ("spmm" for
+    GCN/GIN, "gat" for attention); ``decider`` short-circuits the
+    cost-model sweep with a trained prediction.
+    """
+
+    def __init__(self, *, dim: int, capacity: int = 8, op: str = "spmm",
+                 heads: int = 1, decider=None):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.dim = dim
+        self.capacity = capacity
+        self.op = op
+        self.heads = heads
+        self.decider = decider
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._entries: OrderedDict[ShapeBucket, BucketPack] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, bucket: ShapeBucket, csr: CSRMatrix) -> BucketPack:
+        """The bucket's pack, picking a config from ``csr`` on a miss."""
+        entry = self._entries.get(bucket)
+        if entry is not None:
+            self._entries.move_to_end(bucket)
+            self.hits += 1
+            _metrics.counter("serve_cache_hits_total").inc(bucket=bucket.key)
+            return entry
+        self.misses += 1
+        _metrics.counter("serve_cache_misses_total").inc(bucket=bucket.key)
+        from repro.pipeline import pick_config
+        config = pick_config(csr, self.dim, decider=self.decider,
+                             op=self.op, heads=self.heads)
+        entry = BucketPack(bucket, config, PackGeom.from_bucket(bucket,
+                                                                config))
+        self._entries[bucket] = entry
+        if len(self._entries) > self.capacity:
+            evicted, _ = self._entries.popitem(last=False)
+            self.evictions += 1
+            _metrics.counter("serve_cache_evictions_total").inc(
+                bucket=evicted.key)
+        return entry
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

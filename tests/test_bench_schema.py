@@ -112,6 +112,46 @@ def test_overlap_row_multi_partition_is_measured():
     assert "skipped" not in d
 
 
+# --------------------------------------------------- bench_serve rows
+def test_bench_serve_rows_satisfy_schema():
+    """A small serving sweep emits schema-clean rows (p50/p99/request)
+    with the cache-hit-rate and compiled-bucket count in derived."""
+    from benchmarks.bench_serve import _one
+    from benchmarks.common import ROWS
+    from repro.data.graphs import er
+
+    before = len(ROWS)
+    g = er(1500, 5, seed=0)
+    metrics = _one("er1k5", g.gcn_normalize(), model="gcn",
+                   backend="engine", n_requests=10, seed=0, tick_every=4,
+                   feat=8, hidden=16, classes=4)
+    new = ROWS[before:]
+    assert [n for n, _, _ in new] == [
+        "serve/er1k5/gcn/p50", "serve/er1k5/gcn/p99",
+        "serve/er1k5/gcn/request"]
+    derived = {}
+    for name, us, d in new:
+        derived[name] = validate_row(
+            {"name": name, "us_per_call": us, "derived": d})
+        assert us is not None and us > 0
+    req = derived["serve/er1k5/gcn/request"]
+    assert {"throughput_rps", "hit_rate", "hits", "misses",
+            "compiled_buckets"} <= set(req)
+    # the structured section run.py folds into BENCH_spmm.json
+    assert metrics["requests"] == 10
+    assert {"latency_us_p50", "latency_us_p99", "cache_hit_rate",
+            "compiled_buckets", "throughput_rps"} <= set(metrics)
+    assert metrics["cache_hits"] + metrics["cache_misses"] \
+        == metrics["batches"]
+
+
+def test_bench_serve_registered_in_run_jobs():
+    src = (REPO / "benchmarks" / "run.py").read_text()
+    assert '"serve": bench_serve.run' in src
+    assert '"serve"' in src.split("extras[key] = fn()")[0].rsplit(
+        "elif key in", 1)[-1], "serve missing from structured-extras keys"
+
+
 # ------------------------------------------------ the generated artifact
 def test_bench_artifact_satisfies_schema():
     path = REPO / "BENCH_spmm.json"
@@ -121,6 +161,25 @@ def test_bench_artifact_satisfies_schema():
     assert "rows" in payload and payload["rows"]
     for row in payload["rows"]:
         validate_row(row)
+
+
+def test_bench_artifact_serve_section():
+    """When ci.sh regenerates the artifact with the serve job, the serve
+    section must carry the latency/hit-rate columns per run."""
+    path = REPO / "BENCH_spmm.json"
+    if not path.exists():                              # pragma: no cover
+        pytest.skip("no BENCH_spmm.json generated yet (run scripts/ci.sh)")
+    payload = json.loads(path.read_text())
+    if "serve" not in payload:                         # pragma: no cover
+        pytest.skip("artifact predates the serve bench job")
+    serve = payload["serve"]
+    assert serve["runs"], serve
+    for run in serve["runs"]:
+        assert {"graph", "model", "backend", "latency_us_p50",
+                "latency_us_p99", "throughput_rps", "cache_hit_rate",
+                "compiled_buckets"} <= set(run), sorted(run)
+        assert run["latency_us_p99"] >= run["latency_us_p50"] > 0
+        assert 0.0 <= run["cache_hit_rate"] <= 1.0
 
 
 def test_bench_artifact_has_no_p1_overlap_artifact():
